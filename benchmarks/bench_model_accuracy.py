@@ -1,0 +1,73 @@
+"""Benchmark: model accuracy vs generation cost (paper §3.3, Fig 3.13).
+
+Generate trsm models under several generator configurations, evaluate each
+against an exhaustive measurement sweep, and report the accuracy/cost
+trade-off the paper uses to pick its default configuration.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (GeneratorConfig, KernelBenchmark, generate_model)
+from repro.core.grids import Domain
+from repro.dla.kernels import KERNELS
+
+CASE = ("L", "L", "N", "N", -1)
+DOMAIN = Domain((16, 16), (272, 272))
+
+CONFIGS = {
+    "cheap": GeneratorConfig(overfit=0, oversampling=1, repetitions=3,
+                             error_bound=0.05, min_width=128, max_pieces=4),
+    "default": GeneratorConfig(overfit=0, oversampling=2, repetitions=5,
+                               error_bound=0.03, min_width=64,
+                               max_pieces=12),
+    "accurate": GeneratorConfig(overfit=1, oversampling=3, repetitions=5,
+                                error_bound=0.015, min_width=32,
+                                max_pieces=24),
+}
+
+
+def _exhaustive(points, repetitions=5):
+    kd = KERNELS["trsm"]
+    from repro.core.sampler import measure_calls
+    calls = {p: kd.make_call(CASE, p) for p in points}
+    return measure_calls(calls, repetitions=repetitions)
+
+
+def run(report: List[str]) -> None:
+    kd = KERNELS["trsm"]
+    rng = np.random.default_rng(0)
+    eval_points = [tuple(int(8 * round(v / 8)) for v in p)
+                   for p in rng.integers(24, 264, size=(25, 2))]
+    truth = _exhaustive(eval_points)
+    for name, cfg in CONFIGS.items():
+        bench = KernelBenchmark(
+            name="trsm", cases=(CASE,), domain=DOMAIN,
+            cost_exponents=kd.cost_exponents,
+            make_call=lambda case, sizes: kd.make_call(case, sizes))
+        t0 = time.perf_counter()
+        model, rep = generate_model(bench, cfg)
+        cost_s = time.perf_counter() - t0
+        errs = []
+        for p in eval_points:
+            est = model.estimate(CASE, p)["min"]
+            errs.append(abs(est - truth[p].min) / truth[p].min)
+        report.append(
+            f"config={name:9s} model_error={np.mean(errs):6.1%} "
+            f"max={np.max(errs):6.1%} pieces="
+            f"{sum(rep.pieces_per_case.values()):2d} "
+            f"points={rep.measured_points:4d} cost={cost_s:5.1f}s")
+
+
+def main() -> None:
+    report: List[str] = []
+    run(report)
+    print("\n".join(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark: roofline table per (arch x shape x mesh) from the dry-run
+artifacts (deliverable g).  Reads experiments/dryrun/*.json — run
+``python -m repro.launch.dryrun --all --both-meshes`` first."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def rows(mesh: str = "16x16"):
+    out = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def run(report: List[str]) -> None:
+    if not DRYRUN.exists():
+        report.append("no dry-run artifacts; run repro.launch.dryrun first")
+        return
+    for mesh in ("16x16", "2x16x16"):
+        data = rows(mesh)
+        if not data:
+            continue
+        report.append(f"--- mesh {mesh} ({len(data)} cells) ---")
+        report.append(
+            f"{'arch':16s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>9s} "
+            f"{'coll_ms':>9s} {'dominant':>10s} {'useful':>7s} {'frac':>6s}")
+        for m in data:
+            report.append(
+                f"{m['arch']:16s} {m['shape']:12s} "
+                f"{m['compute_s'] * 1e3:9.2f} {m['memory_s'] * 1e3:9.2f} "
+                f"{m['collective_s'] * 1e3:9.2f} {m['dominant']:>10s} "
+                f"{m['useful_ratio']:7.2f} {m['roofline_fraction']:6.3f}")
+
+
+def main() -> None:
+    report: List[str] = []
+    run(report)
+    print("\n".join(report))
+
+
+if __name__ == "__main__":
+    main()

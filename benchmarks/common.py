@@ -1,0 +1,102 @@
+"""Shared benchmark utilities: kernel model generation with disk caching."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (GeneratorConfig, KernelBenchmark, ModelSet,
+                        PerformanceModel, generate_model)
+from repro.core.grids import Domain
+from repro.dla.kernels import KERNELS
+
+ROOT = Path(__file__).resolve().parents[1]
+MODEL_DIR = ROOT / "experiments" / "models"
+
+#: the kernel/case catalog every blocked algorithm in the benchmarks needs
+DEFAULT_SPECS: List[Tuple[str, Tuple, Tuple[int, ...], Tuple[int, ...]]] = [
+    ("potf2", (("L",),), (16,), (304,)),
+    ("trti2", (("L", "N"),), (16,), (304,)),
+    ("lauu2", (("L",),), (16,), (304,)),
+    ("getf2", (("NP",),), (16, 16), (304, 144)),
+    ("trsyl", (("N", "N", 1),), (16, 16), (144, 144)),
+    ("trsm", (("R", "L", "T", "N", 1), ("L", "L", "N", "N", -1),
+              ("R", "L", "N", "N", -1), ("L", "L", "N", "U", 1)),
+     (16, 16), (304, 304)),
+    ("trmm", (("R", "L", "N", "N", 1), ("L", "L", "N", "N", 1),
+              ("R", "L", "N", "N", -1), ("L", "L", "N", "N", -1),
+              ("L", "L", "T", "N", 1)),
+     (16, 16), (304, 304)),
+    ("syrk", (("L", "N", -1, 1), ("L", "T", 1, 1)),
+     (16, 16), (304, 304)),
+    ("gemm", (("N", "T", -1, 1), ("N", "N", -1, 1), ("N", "N", 1, 1),
+              ("T", "N", 1, 1), ("N", "N", 1, 0), ("N", "N", -1, 0)),
+     (16, 16, 16), (208, 208, 208)),
+]
+
+BENCH_GEN_CONFIG = GeneratorConfig(overfit=0, oversampling=2,
+                                   repetitions=5, error_bound=0.04,
+                                   min_width=64, max_pieces=6)
+
+
+def build_model_set(specs=DEFAULT_SPECS,
+                    config: GeneratorConfig = BENCH_GEN_CONFIG,
+                    cache: str = "default",
+                    verbose: bool = True) -> Tuple[ModelSet, float]:
+    """Generate (or load cached) models; returns (set, generation seconds)."""
+    MODEL_DIR.mkdir(parents=True, exist_ok=True)
+    cache_file = MODEL_DIR / f"{cache}.json"
+    if cache_file.exists():
+        data = json.loads(cache_file.read_text())
+        ms = ModelSet()
+        for d in data["models"]:
+            ms.add(PerformanceModel.from_dict(d))
+        return ms, data.get("gen_seconds", 0.0)
+    ms = ModelSet()
+    t0 = time.perf_counter()
+    for name, cases, lo, hi in specs:
+        kd = KERNELS[name]
+        bench = KernelBenchmark(
+            name=name, cases=cases, domain=Domain(lo, hi),
+            cost_exponents=kd.cost_exponents,
+            make_call=lambda case, sizes, _kd=kd: _kd.make_call(case, sizes),
+        )
+        model, report = generate_model(bench, config)
+        ms.add(model)
+        if verbose:
+            print(f"  [modelgen] {name}: {report.measured_points} pts, "
+                  f"{sum(report.pieces_per_case.values())} pieces, "
+                  f"{report.seconds:.1f}s", flush=True)
+    gen_s = time.perf_counter() - t0
+    cache_file.write_text(json.dumps({
+        "gen_seconds": gen_s,
+        "models": [m.to_dict() for m in ms.models.values()],
+    }))
+    return ms, gen_s
+
+
+def median_time(fn, repetitions: int = 5) -> float:
+    fn()  # warm-up
+    ts = []
+    for _ in range(repetitions):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def spd(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    return a @ a.T + n * np.eye(n)
+
+
+def lower_nonsing(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = np.tril(rng.standard_normal((n, n)))
+    np.fill_diagonal(a, np.abs(a.diagonal()) + n)
+    return a

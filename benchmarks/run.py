@@ -1,0 +1,60 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Run with ``PYTHONPATH=src python -m benchmarks.run [--only <name>]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (bench_algorithm_selection, bench_blocksize,
+               bench_cache_effects, bench_contractions,
+               bench_model_accuracy, bench_prediction_accuracy,
+               bench_roofline, bench_tile_tuner)
+
+SUITES = {
+    "model_accuracy": (bench_model_accuracy,
+                       "paper §3.3 / Fig 3.13: model accuracy vs cost"),
+    "cache_effects": (bench_cache_effects,
+                      "paper §2.1.4 / Ch 5: warm-vs-cold kernel timings"),
+    "prediction_accuracy": (bench_prediction_accuracy,
+                            "paper Tab 4.3: blocked-algorithm prediction"),
+    "algorithm_selection": (bench_algorithm_selection,
+                            "paper §4.5: variant ranking + speedup"),
+    "blocksize": (bench_blocksize,
+                  "paper §4.6: block-size optimization yield"),
+    "contractions": (bench_contractions,
+                     "paper Ch 6: contraction micro-benchmark prediction"),
+    "tile_tuner": (bench_tile_tuner,
+                   "beyond-paper: Pallas BlockSpec tile selection"),
+    "roofline": (bench_roofline,
+                 "deliverable (g): per-cell roofline table"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for name, (mod, desc) in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== {name}: {desc} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            report = []
+            mod.run(report)
+            print("\n".join(report))
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

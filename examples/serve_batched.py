@@ -1,0 +1,49 @@
+"""Batched serving demo: continuous-batching decode over multiple requests.
+
+    PYTHONPATH=src python examples/serve_batched.py [--fast] [--arch <id>]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.configs import get_config, reduced                # noqa: E402
+from repro.models import init_params                         # noqa: E402
+from repro.serve.engine import Request, ServeEngine          # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    n_req = 3 if args.fast else args.requests
+
+    cfg = reduced(get_config(args.arch))
+    if not cfg.causal:
+        raise SystemExit(f"{cfg.name} is encoder-only; pick a decoder arch")
+    print(f"== serving {cfg.name} (reduced) ==")
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    engine = ServeEngine(cfg, params, batch_slots=3, ctx_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 8,
+                                               dtype=np.int32),
+                    max_new_tokens=6) for i in range(n_req)]
+    stats = engine.run(reqs)
+    for r in reqs:
+        print(f"   request {r.uid}: {len(r.out_tokens)} tokens "
+              f"-> {r.out_tokens}")
+    print(f"   {stats.tokens_out} tokens in {stats.decode_steps} decode "
+          f"steps ({stats.tokens_per_s:.1f} tok/s incl. host overhead)")
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""repro.core — measurement-based performance modeling & prediction.
+
+The paper's primary contribution (Peise 2017): piecewise-polynomial kernel
+performance models generated once per setup, instantaneous predictions of
+blocked-algorithm runtime, algorithm ranking, block-size optimization, and
+cache-aware micro-benchmarks for tensor contractions.
+"""
+
+from .fitting import (Polynomial, error_measure, fit_relative, monomial_basis,
+                      relative_errors)
+from .grids import Domain, grid_points
+from .model import CaseModel, ModelSet, PerformanceModel, Piece
+from .modelgen import (GenerationReport, KernelBenchmark, generate_model,
+                       generate_model_set)
+from .predict import (KernelCall, absolute_relative_error,
+                      predict_efficiency, predict_performance,
+                      predict_runtime, relative_error)
+from .refinement import GeneratorConfig, refine, stats_sample_fn
+from .sampler import STATS, Stats, measure_calls, measure_single
+from .selection import (RankedAlgorithm, optimize_algorithm_and_block_size,
+                        optimize_block_size, performance_yield,
+                        rank_algorithms, select_algorithm)
+
+__all__ = [
+    "Polynomial", "error_measure", "fit_relative", "monomial_basis",
+    "relative_errors", "Domain", "grid_points", "CaseModel", "ModelSet",
+    "PerformanceModel", "Piece", "GenerationReport", "KernelBenchmark",
+    "generate_model", "generate_model_set", "KernelCall",
+    "absolute_relative_error", "predict_efficiency", "predict_performance",
+    "predict_runtime", "relative_error", "GeneratorConfig", "refine",
+    "stats_sample_fn", "STATS", "Stats", "measure_calls", "measure_single",
+    "RankedAlgorithm", "optimize_algorithm_and_block_size",
+    "optimize_block_size", "performance_yield", "rank_algorithms",
+    "select_algorithm",
+]

@@ -1,0 +1,325 @@
+"""BLAS-based tensor-contraction algorithms + micro-benchmark prediction
+(paper Ch. 6).
+
+A contraction like ``C[abc] = A[ai] * B[ibc]`` can be computed by many
+alternative algorithms, each consisting of nested **for**-loops around a
+single fixed-size compute kernel (gemm / gemv / ger / dot / axpy analogues —
+here: jitted einsums over the kernel dimensions).  §6.1's generator
+enumerates them systematically: choose which indices become loop indices,
+check the remainder matches a kernel pattern, and permute the loop order.
+
+Since each algorithm performs its *entire* computation in repeated calls to
+ONE kernel with FIXED operand sizes, a micro-benchmark of a handful of calls
+predicts the whole algorithm (§6.2).  The benchmark is *cache-aware*: for
+each operand the *access distance* (bytes touched between consecutive uses
+of the same operand slice, §6.2.3) decides whether the timed calls reuse a
+warm buffer or cycle through fresh buffers, recreating the cache state of
+the real loop nest.  First-iteration overhead (§6.2.6) is measured
+separately and added once.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampler import Stats, measure_calls
+
+_DTYPE = np.float32
+_ITEM = 4
+
+
+# ------------------------------------------------------------------- spec --
+
+@dataclass(frozen=True)
+class ContractionSpec:
+    """``C[out] = A[a_idx] * B[b_idx]`` in Einstein notation."""
+
+    a_idx: str
+    b_idx: str
+    out_idx: str
+
+    @staticmethod
+    def parse(expr: str) -> "ContractionSpec":
+        """Parse e.g. ``"abc=ai,ibc"`` or einsum-style ``"ai,ibc->abc"``."""
+        if "->" in expr:
+            ins, out = expr.split("->")
+            a, b = ins.split(",")
+        else:
+            out, ins = expr.split("=")
+            a, b = ins.split(",")
+        return ContractionSpec(a.strip(), b.strip(), out.strip())
+
+    @property
+    def contracted(self) -> Tuple[str, ...]:
+        return tuple(i for i in self.a_idx if i in self.b_idx)
+
+    @property
+    def all_indices(self) -> Tuple[str, ...]:
+        seen = []
+        for i in self.a_idx + self.b_idx:
+            if i not in seen:
+                seen.append(i)
+        return tuple(seen)
+
+    def flops(self, sizes: Mapping[str, int]) -> float:
+        return 2.0 * math.prod(sizes[i] for i in self.all_indices)
+
+    def einsum_expr(self) -> str:
+        return f"{self.a_idx},{self.b_idx}->{self.out_idx}"
+
+
+# -------------------------------------------------------------- algorithms --
+
+#: kernel patterns: (#free-A kernel dims, #free-B kernel dims, #contracted)
+_KERNEL_PATTERNS = {
+    "gemm": (1, 1, 1),
+    "gemv": (1, 0, 1),   # A matrix, B vector
+    "gevm": (0, 1, 1),   # row-vector x matrix
+    "ger": (1, 1, 0),    # outer-product update
+    "dot": (0, 0, 1),
+    "axpy_a": (1, 0, 0),  # scaled copy of an A fiber
+    "axpy_b": (0, 1, 0),
+}
+
+
+@dataclass(frozen=True)
+class ContractionAlgorithm:
+    """One loop-nest + kernel decomposition of a contraction (§6.1)."""
+
+    spec: ContractionSpec
+    kernel: str
+    kernel_dims: Tuple[str, ...]   # indices handled inside the kernel call
+    loop_order: Tuple[str, ...]    # outer-to-inner loop indices
+
+    @property
+    def name(self) -> str:
+        loops = "".join(self.loop_order) or "-"
+        return f"loops[{loops}]_{self.kernel}[{''.join(self.kernel_dims)}]"
+
+    def kernel_equation(self) -> str:
+        """Einsum equation of one kernel invocation."""
+        a = "".join(i for i in self.spec.a_idx if i in self.kernel_dims)
+        b = "".join(i for i in self.spec.b_idx if i in self.kernel_dims)
+        o = "".join(i for i in self.spec.out_idx if i in self.kernel_dims)
+        return f"{a},{b}->{o}"
+
+    def n_iterations(self, sizes: Mapping[str, int]) -> int:
+        return math.prod(sizes[i] for i in self.loop_order) if \
+            self.loop_order else 1
+
+    def kernel_shapes(self, sizes: Mapping[str, int]):
+        a = tuple(sizes[i] for i in self.spec.a_idx if i in self.kernel_dims)
+        b = tuple(sizes[i] for i in self.spec.b_idx if i in self.kernel_dims)
+        o = tuple(sizes[i] for i in self.spec.out_idx
+                  if i in self.kernel_dims)
+        return a, b, o
+
+    def kernel_flops(self, sizes: Mapping[str, int]) -> float:
+        return 2.0 * math.prod(sizes[i] for i in self.kernel_dims)
+
+
+def generate_algorithms(spec: ContractionSpec,
+                        max_loop_perms: int = 24) -> List[ContractionAlgorithm]:
+    """Enumerate all loop/kernel decompositions (§6.1).
+
+    For every kernel pattern, choose kernel indices (free-A, free-B,
+    contracted) consistent with the pattern, make the rest loop indices, and
+    emit one algorithm per loop-order permutation.
+    """
+    contracted = set(spec.contracted)
+    free_a = [i for i in spec.a_idx if i not in contracted]
+    free_b = [i for i in spec.b_idx if i not in contracted]
+    algs: List[ContractionAlgorithm] = []
+    seen = set()
+    for kernel, (nfa, nfb, nc) in _KERNEL_PATTERNS.items():
+        for ka in itertools.combinations(free_a, nfa):
+            for kb in itertools.combinations(free_b, nfb):
+                for kc in itertools.combinations(sorted(contracted), nc):
+                    kdims = tuple(ka) + tuple(kb) + tuple(kc)
+                    loops = [i for i in spec.all_indices if i not in kdims]
+                    perms = list(itertools.permutations(loops))
+                    if len(perms) > max_loop_perms:
+                        perms = perms[:max_loop_perms]
+                    for order in perms:
+                        key = (kernel, kdims, order)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        algs.append(ContractionAlgorithm(
+                            spec, kernel, kdims, order))
+    return algs
+
+
+# --------------------------------------------------------------- execution --
+
+@functools.lru_cache(maxsize=None)
+def _kernel_fn(equation: str):
+    return jax.jit(lambda a, b: jnp.einsum(equation, a, b))
+
+
+def _slicer(idx: str, kernel_dims, assignment):
+    return tuple(
+        slice(None) if i in kernel_dims else assignment[i] for i in idx)
+
+
+def execute(alg: ContractionAlgorithm, A: np.ndarray, B: np.ndarray,
+            sizes: Mapping[str, int]) -> np.ndarray:
+    """Run the loop nest, calling the jitted kernel per iteration."""
+    spec = alg.spec
+    out_shape = tuple(sizes[i] for i in spec.out_idx)
+    C = np.zeros(out_shape, dtype=_DTYPE)
+    fn = _kernel_fn(alg.kernel_equation())
+    ranges = [range(sizes[i]) for i in alg.loop_order]
+    accumulate = any(i in spec.contracted for i in alg.loop_order)
+    for combo in itertools.product(*ranges):
+        assign = dict(zip(alg.loop_order, combo))
+        a = A[_slicer(spec.a_idx, alg.kernel_dims, assign)]
+        b = B[_slicer(spec.b_idx, alg.kernel_dims, assign)]
+        r = np.asarray(fn(jnp.asarray(a), jnp.asarray(b)))
+        csl = _slicer(spec.out_idx, alg.kernel_dims, assign)
+        if accumulate:
+            C[csl] += r
+        else:
+            C[csl] = r
+    return C
+
+
+def execute_reference(spec: ContractionSpec, A: np.ndarray,
+                      B: np.ndarray) -> np.ndarray:
+    return np.einsum(spec.einsum_expr(), A, B)
+
+
+# ----------------------------------------------------- cache-aware predict --
+
+#: effective cache capacity used for access-distance decisions (bytes).
+CACHE_BYTES = 32 * 2 ** 20
+
+
+def access_distance(alg: ContractionAlgorithm,
+                    sizes: Mapping[str, int]) -> Dict[str, float]:
+    """Bytes touched between consecutive uses of the same slice (§6.2.3).
+
+    For each operand, find the innermost loop index NOT indexing it; the
+    slice is reused after the loops inside that one complete — the data
+    touched in between is the access distance.  Operands indexed by the
+    innermost loop change every iteration (distance = one call's working
+    set); operands not indexed by any loop are touched every iteration
+    (distance 0 → always warm after the first iteration).
+    """
+    spec = alg.spec
+    a_sh, b_sh, o_sh = alg.kernel_shapes(sizes)
+    call_bytes = _ITEM * (math.prod(a_sh) + math.prod(b_sh) +
+                          math.prod(o_sh))
+    out = {}
+    for name, idx in (("A", spec.a_idx), ("B", spec.b_idx),
+                      ("C", spec.out_idx)):
+        dist = 0.0
+        # walk loops inner -> outer; accumulate iteration space not touching
+        # this operand
+        reuse_span = 1
+        indexed = False
+        for loop in reversed(alg.loop_order):
+            if loop in idx:
+                indexed = True
+                break
+            reuse_span *= sizes[loop]
+        if not alg.loop_order:
+            dist = 0.0
+        elif not indexed:
+            # operand constant across ALL loops: reused every iteration
+            dist = call_bytes
+        else:
+            dist = call_bytes * reuse_span
+        out[name] = dist
+    return out
+
+
+def _make_buffers(shape, n_copies, rng):
+    return [jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+            for _ in range(n_copies)]
+
+
+def microbenchmark(alg: ContractionAlgorithm, sizes: Mapping[str, int], *,
+                   repetitions: int = 5, cache_bytes: int = CACHE_BYTES,
+                   rng: Optional[np.random.Generator] = None,
+                   ) -> Tuple[Stats, float]:
+    """Cache-aware micro-benchmark of ONE kernel invocation (§6.2).
+
+    Returns (per-call stats, first-call overhead in seconds).  Operands whose
+    access distance exceeds the cache capacity are cycled through distinct
+    buffers between timed calls (cold); the others reuse one buffer (warm).
+    """
+    rng = rng or np.random.default_rng(0)
+    a_sh, b_sh, _ = alg.kernel_shapes(sizes)
+    fn = _kernel_fn(alg.kernel_equation())
+    dists = access_distance(alg, sizes)
+    n_cyc = max(2, min(8, repetitions))
+    a_bufs = _make_buffers(a_sh, n_cyc if dists["A"] > cache_bytes else 1,
+                           rng)
+    b_bufs = _make_buffers(b_sh, n_cyc if dists["B"] > cache_bytes else 1,
+                           rng)
+
+    counter = [0]
+
+    def call():
+        i = counter[0]
+        counter[0] += 1
+        fn(a_bufs[i % len(a_bufs)],
+           b_bufs[i % len(b_bufs)]).block_until_ready()
+
+    # first-call overhead (compile + cold libraries), measured separately
+    t0 = time.perf_counter()
+    call()
+    first = time.perf_counter() - t0
+    stats = measure_calls({"k": call}, repetitions=repetitions,
+                          warm_pairs=False, warmup=False)["k"]
+    return stats, first
+
+
+def predict_contraction(alg: ContractionAlgorithm,
+                        sizes: Mapping[str, int], *,
+                        repetitions: int = 5,
+                        stat: str = "med") -> float:
+    """Predicted total runtime: n_iterations x per-call estimate (§6.2)."""
+    stats, first = microbenchmark(alg, sizes, repetitions=repetitions)
+    n = alg.n_iterations(sizes)
+    per_call = getattr(stats, stat)
+    return per_call * n
+
+
+def rank_contraction_algorithms(spec: ContractionSpec,
+                                sizes: Mapping[str, int], *,
+                                algorithms: Optional[Sequence[
+                                    ContractionAlgorithm]] = None,
+                                repetitions: int = 5,
+                                stat: str = "med",
+                                ) -> List[Tuple[ContractionAlgorithm, float]]:
+    """Predict every algorithm and sort ascending by predicted runtime."""
+    algs = list(algorithms) if algorithms is not None else \
+        generate_algorithms(spec)
+    ranked = [(a, predict_contraction(a, sizes, repetitions=repetitions,
+                                      stat=stat)) for a in algs]
+    ranked.sort(key=lambda t: t[1])
+    return ranked
+
+
+def measure_contraction(alg: ContractionAlgorithm, A: np.ndarray,
+                        B: np.ndarray, sizes: Mapping[str, int],
+                        repetitions: int = 3) -> Stats:
+    """Time full algorithm executions (the expensive reference, §6.3)."""
+    execute(alg, A, B, sizes)  # warm-up/compile
+    samples = []
+    for _ in range(repetitions):
+        t0 = time.perf_counter()
+        execute(alg, A, B, sizes)
+        samples.append(time.perf_counter() - t0)
+    return Stats.from_samples(samples)

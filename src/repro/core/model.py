@@ -1,0 +1,154 @@
+"""Performance-model structure (paper §3.2.1, Fig 3.9).
+
+A :class:`PerformanceModel` represents the runtime of ONE kernel on ONE setup
+(hardware, thread count, library).  It is composed of *cases* — discrete
+combinations of flag-like arguments — and, per case, a *piecewise polynomial*
+over the hyper-cuboidal domain of size arguments.  Each polynomial piece
+actually carries one polynomial per runtime summary statistic
+(min/med/max/mean/std), so estimates are distributions, not point values.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .fitting import Polynomial
+from .grids import Domain
+from .sampler import STATS
+
+Case = Tuple  # hashable combination of flag/scalar-class/layout arguments
+
+
+@dataclass(frozen=True)
+class Piece:
+    """One polynomial piece: a domain plus per-statistic polynomials."""
+
+    domain: Domain
+    polys: Dict[str, Polynomial]  # stat name -> polynomial
+
+    def estimate(self, sizes: Sequence[int]) -> Dict[str, float]:
+        return {s: max(float(p(np.asarray(sizes, dtype=np.float64)[None, :])),
+                       0.0)
+                for s, p in self.polys.items()}
+
+
+@dataclass
+class CaseModel:
+    pieces: List[Piece] = field(default_factory=list)
+
+    def find_piece(self, sizes: Sequence[int]) -> Optional[Piece]:
+        for piece in self.pieces:
+            if piece.domain.contains(sizes):
+                return piece
+        return None
+
+    def nearest_piece(self, sizes: Sequence[int]) -> Piece:
+        """Clamp out-of-domain queries to the closest piece (extrapolation)."""
+        if not self.pieces:
+            raise KeyError("empty case model")
+        best, best_d = None, None
+        for piece in self.pieces:
+            d = 0.0
+            for lo, hi, x in zip(piece.domain.lo, piece.domain.hi, sizes):
+                if x < lo:
+                    d += (lo - x) ** 2
+                elif x > hi:
+                    d += (x - hi) ** 2
+            if best_d is None or d < best_d:
+                best, best_d = piece, d
+        return best
+
+
+@dataclass
+class PerformanceModel:
+    """Piecewise-polynomial runtime model of one kernel (§3.2.1)."""
+
+    kernel: str
+    setup: str = "default"
+    cases: Dict[Case, CaseModel] = field(default_factory=dict)
+
+    def add_piece(self, case: Case, piece: Piece) -> None:
+        self.cases.setdefault(tuple(case), CaseModel()).pieces.append(piece)
+
+    def estimate(self, case: Case, sizes: Sequence[int],
+                 *, extrapolate: bool = True) -> Dict[str, float]:
+        """Runtime summary-statistic estimates for one kernel invocation."""
+        if any(s <= 0 for s in sizes):
+            # degenerate call: zero work (Example 4.1's 0-width panels)
+            return {s: 0.0 for s in STATS}
+        cm = self.cases.get(tuple(case))
+        if cm is None:
+            raise KeyError(f"{self.kernel}: no model for case {case!r} "
+                           f"(have {list(self.cases)})")
+        piece = cm.find_piece(sizes)
+        if piece is None:
+            if not extrapolate:
+                raise KeyError(f"{self.kernel}{case}: {sizes} outside domain")
+            piece = cm.nearest_piece(sizes)
+        return piece.estimate(sizes)
+
+    # ---------------------------------------------------------------- io --
+    def to_dict(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "setup": self.setup,
+            "cases": [
+                {
+                    "case": list(case),
+                    "pieces": [
+                        {"lo": list(p.domain.lo), "hi": list(p.domain.hi),
+                         "polys": {s: poly.to_dict()
+                                   for s, poly in p.polys.items()}}
+                        for p in cm.pieces
+                    ],
+                }
+                for case, cm in self.cases.items()
+            ],
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "PerformanceModel":
+        m = PerformanceModel(kernel=d["kernel"], setup=d.get("setup", ""))
+        for case_entry in d["cases"]:
+            case = tuple(case_entry["case"])
+            for p in case_entry["pieces"]:
+                piece = Piece(
+                    domain=Domain(tuple(p["lo"]), tuple(p["hi"])),
+                    polys={s: Polynomial.from_dict(pd)
+                           for s, pd in p["polys"].items()},
+                )
+                m.add_piece(case, piece)
+        return m
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f)
+
+    @staticmethod
+    def load(path: str) -> "PerformanceModel":
+        with open(path) as f:
+            return PerformanceModel.from_dict(json.load(f))
+
+
+class ModelSet:
+    """The per-setup database of kernel models (Fig 3.9 top level)."""
+
+    def __init__(self, models: Mapping[str, PerformanceModel] = ()):
+        self.models: Dict[str, PerformanceModel] = dict(models)
+
+    def __getitem__(self, kernel: str) -> PerformanceModel:
+        return self.models[kernel]
+
+    def __contains__(self, kernel: str) -> bool:
+        return kernel in self.models
+
+    def add(self, model: PerformanceModel) -> None:
+        self.models[model.kernel] = model
+
+    def estimate(self, kernel: str, case: Case,
+                 sizes: Sequence[int]) -> Dict[str, float]:
+        return self.models[kernel].estimate(case, sizes)

@@ -1,0 +1,78 @@
+"""Model-based prediction of blocked algorithms (paper §4.1, Eq. 4.1–4.6).
+
+A blocked algorithm's execution is a deterministic sequence of kernel calls;
+its predicted runtime is the sum of the per-call model estimates.  Summary
+statistics propagate: min/med/max/mean add, standard deviations add in
+quadrature (uncorrelated-estimate assumption, Eq. 4.3).  Performance and
+efficiency predictions follow Eq. 4.4–4.6 including the second/first-order
+Taylor corrections for the mean/std of the reciprocal.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+from .model import ModelSet
+from .sampler import STATS, Stats
+
+
+@dataclass(frozen=True)
+class KernelCall:
+    """One kernel invocation inside an algorithm's call sequence."""
+
+    kernel: str          # e.g. "gemm"
+    case: Tuple          # flag/layout case, e.g. ("N", "T")
+    sizes: Tuple[int, ...]
+
+    def __repr__(self) -> str:  # compact trace printing
+        c = ",".join(map(str, self.case))
+        s = "x".join(map(str, self.sizes))
+        return f"{self.kernel}[{c}]({s})"
+
+
+def predict_runtime(calls: Iterable[KernelCall], models: ModelSet) -> Stats:
+    """t_pred^s = sum over calls of t_est^s  (Eq. 4.2/4.3)."""
+    acc = {s: 0.0 for s in STATS}
+    var = 0.0
+    for call in calls:
+        est = models.estimate(call.kernel, call.case, call.sizes)
+        for s in ("min", "med", "max", "mean"):
+            acc[s] += est[s]
+        var += est["std"] ** 2
+    acc["std"] = var ** 0.5
+    return Stats(**{"min": acc["min"], "med": acc["med"], "max": acc["max"],
+                    "mean": acc["mean"], "std": acc["std"]})
+
+
+def predict_performance(runtime: Stats, cost_flops: float) -> Dict[str, float]:
+    """FLOP-rate prediction from a runtime prediction (Eq. 4.4/4.5)."""
+    mu, sigma = runtime.mean, runtime.std
+    out = {
+        "min": cost_flops / runtime.max if runtime.max > 0 else float("inf"),
+        "med": cost_flops / runtime.med if runtime.med > 0 else float("inf"),
+        "max": cost_flops / runtime.min if runtime.min > 0 else float("inf"),
+    }
+    if mu > 0:
+        out["mean"] = cost_flops / mu * (1.0 + sigma ** 2 / mu ** 2)
+        out["std"] = cost_flops * sigma / mu ** 2
+    else:
+        out["mean"], out["std"] = float("inf"), 0.0
+    return out
+
+
+def predict_efficiency(performance: Dict[str, float],
+                       peak_flops: float) -> Dict[str, float]:
+    """Eq. 4.6: efficiency = performance / peak."""
+    return {s: v / peak_flops for s, v in performance.items()}
+
+
+# ------------------------------------------------------------------ errors --
+
+def relative_error(pred: float, meas: float) -> float:
+    """x_RE = (pred - meas) / meas  (§4.2)."""
+    return (pred - meas) / meas
+
+
+def absolute_relative_error(pred: float, meas: float) -> float:
+    return abs(relative_error(pred, meas))

@@ -1,0 +1,86 @@
+"""Algorithm selection and block-size optimization (paper §4.5 / §4.6).
+
+Given a set of mathematically-equivalent blocked-algorithm variants — each
+represented by a *tracer* producing its kernel-call sequence for a problem
+size n and block size b — rank them by predicted runtime, entirely without
+executing any of them.  Block-size optimization evaluates the prediction over
+a candidate grid of b and returns the argmin plus the whole profile (used to
+compute the paper's "performance yield" against empirical optima).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .model import ModelSet
+from .predict import KernelCall, predict_runtime
+from .sampler import Stats
+
+Tracer = Callable[[int, int], List[KernelCall]]  # (n, b) -> call sequence
+
+
+@dataclass(frozen=True)
+class RankedAlgorithm:
+    name: str
+    runtime: Stats
+    block_size: int
+
+
+def rank_algorithms(tracers: Mapping[str, Tracer], models: ModelSet,
+                    n: int, b: int, *,
+                    stat: str = "med") -> List[RankedAlgorithm]:
+    """Predict every variant's runtime and sort ascending (§4.5)."""
+    ranked = [
+        RankedAlgorithm(name=name,
+                        runtime=predict_runtime(tracer(n, b), models),
+                        block_size=b)
+        for name, tracer in tracers.items()
+    ]
+    ranked.sort(key=lambda r: getattr(r.runtime, stat))
+    return ranked
+
+
+def select_algorithm(tracers: Mapping[str, Tracer], models: ModelSet,
+                     n: int, b: int, *, stat: str = "med") -> str:
+    return rank_algorithms(tracers, models, n, b, stat=stat)[0].name
+
+
+def optimize_block_size(tracer: Tracer, models: ModelSet, n: int,
+                        candidates: Sequence[int], *,
+                        stat: str = "med") -> Tuple[int, Dict[int, float]]:
+    """b_pred = argmin_b t_pred(n, b) over the candidate grid (§4.6)."""
+    profile = {
+        b: getattr(predict_runtime(tracer(n, b), models), stat)
+        for b in candidates
+    }
+    b_pred = min(profile, key=profile.get)
+    return b_pred, profile
+
+
+def optimize_algorithm_and_block_size(
+        tracers: Mapping[str, Tracer], models: ModelSet, n: int,
+        candidates: Sequence[int], *, stat: str = "med",
+) -> Tuple[str, int, float]:
+    """Joint variant + block-size selection: the paper's two goals combined."""
+    best: Optional[Tuple[str, int, float]] = None
+    for name, tracer in tracers.items():
+        b, profile = optimize_block_size(tracer, models, n, candidates,
+                                         stat=stat)
+        t = profile[b]
+        if best is None or t < best[2]:
+            best = (name, b, t)
+    assert best is not None
+    return best
+
+
+def performance_yield(measured_runtime: Mapping[int, float], b_pred: int,
+                      ) -> Tuple[int, float]:
+    """§4.6: yield = t_meas(b_opt) / t_meas(b_pred) ∈ (0, 1].
+
+    ``measured_runtime`` maps block size -> measured (median) runtime.
+    Returns (b_opt, yield).
+    """
+    b_opt = min(measured_runtime, key=measured_runtime.get)
+    y = measured_runtime[b_opt] / measured_runtime[b_pred]
+    return b_opt, y

@@ -1,0 +1,40 @@
+"""Elastic re-scaling: resume a job on a different mesh.
+
+On node failure the launcher re-forms a (smaller or larger) mesh from the
+surviving hosts; parameters and optimizer state restore from the last
+checkpoint and are **re-placed** under the new mesh's shardings
+(``checkpoint.restore(shardings=...)`` -> ``jax.device_put``).  The data
+pipeline needs no rewind logic because batches are a pure function of the
+step.  This module holds the pure re-placement logic, testable on CPU by
+shrinking a local mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import param_specs
+
+
+def reshard_tree(tree: Any, mesh: Mesh) -> Any:
+    """Re-place every leaf under the sharding rules evaluated on ``mesh``."""
+    specs = param_specs(tree, mesh)
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        tree, specs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P))
+
+
+def resume_on_mesh(ckpt_dir: str, tree_like: Any, mesh: Mesh,
+                   step=None) -> Tuple[Any, int]:
+    """Restore the latest checkpoint directly onto ``mesh``."""
+    from ..train.checkpoint import restore
+
+    specs = param_specs(tree_like, mesh)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return restore(ckpt_dir, tree_like, step=step, shardings=shardings)

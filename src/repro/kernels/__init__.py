@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+* ``matmul``          — tiled MXU matmul (the dgemm analogue; tunable tiles)
+* ``flash_attention`` — fused attention (GQA / causal / window / softcap)
+* ``ssd``             — Mamba-2 chunked state-space scan
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .matmul import matmul, tile_legal, vmem_bytes
+from .ssd import ssd
+
+__all__ = ["ops", "ref", "flash_attention", "matmul", "tile_legal",
+           "vmem_bytes", "ssd"]

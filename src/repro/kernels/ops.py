@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a real TPU backend the kernels compile natively; on any other backend
+(this container's CPU) they execute in ``interpret=True`` mode, which runs
+the kernel body in Python per grid step and is used to validate correctness
+against the ``ref.py`` oracles.  ``use_pallas=False`` (or the absence of a
+tile configuration) falls back to the XLA reference implementations — this
+is also what the distributed model code uses under ``shard_map``/``pjit``
+so that dry-run lowering works for every mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .matmul import matmul as _pallas_matmul
+from .matmul import tile_legal, vmem_bytes
+from .ssd import ssd as _pallas_ssd
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def matmul(x, y, *, bm=128, bn=128, bk=128, use_pallas=True):
+    if not use_pallas:
+        return ref.matmul_ref(x, y)
+    return _pallas_matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+              bq=128, bkv=128, use_pallas=True):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap)
+    return flash_attention(q, k, v, bq=bq, bkv=bkv, causal=causal,
+                           window=window, softcap=softcap,
+                           interpret=_interpret())
+
+
+def ssd(x, dt, a_log, b, c, *, chunk=128, use_pallas=True):
+    if not use_pallas:
+        return ref.ssd_ref(x, dt, a_log, b, c)
+    return _pallas_ssd(x, dt, a_log, b, c, chunk=chunk,
+                       interpret=_interpret())
+
+
+__all__ = ["matmul", "attention", "ssd", "tile_legal", "vmem_bytes",
+           "on_tpu"]

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jax.Array:
+    """Dense reference attention with GQA / causal / window / softcap."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32)
+    s = s / (d ** 0.5)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vr)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+            c: jax.Array, *, d_skip: jax.Array = None) -> jax.Array:
+    """Sequential (O(L)) reference for the Mamba-2 SSD recurrence.
+
+    x: (B, L, H, P); dt: (B, L, H); a_log: (H,); b, c: (B, L, G, N).
+    State h: (B, H, P, N), groups broadcast over heads (H % G == 0).
+    """
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    a = -jnp.exp(a_log)                       # (H,) negative decay rates
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                 # (B,H,P), (B,H), (B,G,N) x2
+        decay = jnp.exp(a[None, :] * dtt)     # (B, H)
+        bt_h = jnp.repeat(bt, rep, axis=1)    # (B, H, N)
+        ct_h = jnp.repeat(ct, rep, axis=1)
+        h = h * decay[..., None, None] + (
+            (dtt[..., None] * xt)[..., :, None] * bt_h[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct_h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), dtype=jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                # (B, L, H, P)
+    if d_skip is not None:
+        y = y + d_skip[None, None, :, None] * x
+    return y.astype(x.dtype)

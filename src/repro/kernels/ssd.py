@@ -1,0 +1,94 @@
+"""Mamba-2 SSD (state-space duality) chunked Pallas kernel.
+
+The SSD recurrence  h_t = h_{t-1} * exp(a*dt_t) + dt_t * x_t ⊗ b_t,
+y_t = c_t · h_t  is computed chunk-wise (the paper-recommended dual form):
+within a chunk of length Q the output is a masked, decay-weighted
+"attention" matmul (MXU-friendly); across chunks a (P, N) state is carried
+in VMEM scratch along the innermost (sequential) grid dimension — the same
+revisiting pattern the flash-attention kernel uses for its softmax state.
+
+Grid: (batch, head, n_chunks); b/c projections are group-indexed in the
+BlockSpec (G groups shared across H heads, like GQA).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, o_ref, h_ref, *,
+                nchunks: int, q: int):
+    ch = pl.program_id(2)
+
+    @pl.when(ch == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = -jnp.exp(alog_ref[0])                 # scalar decay rate (< 0)
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (Q,)
+    b = b_ref[0, :, 0, :].astype(jnp.float32)    # (Q, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)    # (Q, N)
+
+    s = jnp.cumsum(a * dt)                    # (Q,) inclusive log-decay
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    seg = s[:, None] - s[None, :]
+    decay = jnp.where(i_idx >= j_idx, jnp.exp(seg), 0.0)
+    # intra-chunk: masked decay-weighted attention
+    g = jnp.dot(c, b.T, preferred_element_type=jnp.float32)
+    g = g * decay * dt[None, :]
+    y = jnp.dot(g, x, preferred_element_type=jnp.float32)     # (Q, P)
+    # inter-chunk: contribution of the carried state
+    h = h_ref[...]                             # (P, N)
+    y = y + jnp.exp(s)[:, None] * jnp.dot(
+        c, h.T, preferred_element_type=jnp.float32)
+    # state update for the next chunk
+    w = dt * jnp.exp(s[-1] - s)                # (Q,)
+    h_ref[...] = jnp.exp(s[-1]) * h + jnp.dot(
+        x.T, b * w[:, None], preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+        c: jax.Array, *, chunk: int = 128,
+        interpret: bool = False) -> jax.Array:
+    """Chunked SSD scan.  x: (B,L,H,P); dt: (B,L,H); a_log: (H,);
+    b/c: (B,L,G,N) with H % G == 0.  Returns (B,L,H,P)."""
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert H % G == 0
+    rep = H // G
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    grid = (B, H, L // chunk)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, nchunks=grid[2], q=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bb, h, ch: (bb, ch, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, h, ch: (bb, ch, h)),
+            pl.BlockSpec((1,), lambda bb, h, ch: (h,)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bb, h, ch, r=rep: (bb, ch, h // r, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bb, h, ch, r=rep: (bb, ch, h // r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P),
+                               lambda bb, h, ch: (bb, ch, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[_VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b, c)

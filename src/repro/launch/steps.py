@@ -1,0 +1,128 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the dry-run; the same step functions are
+jitted with real arrays by the train/serve drivers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec
+from ..models import decode_step, init_decode_state, init_params, loss_fn
+from ..models.prefill import prefill
+from ..train.optimizer import AdamW, AdamWState, apply_updates
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ------------------------------------------------------------------ steps --
+
+def make_train_step(cfg: ArchConfig, optimizer: AdamW, act_spec=None,
+                    accum_steps: int = 1, remat_policy=None):
+    """Build the jittable train step.
+
+    ``accum_steps > 1`` enables gradient accumulation over micro-batches
+    (scan), dividing activation memory by the factor at the cost of one
+    gradient all-reduce per micro-batch; ``remat_policy`` selects the
+    activation-checkpoint policy ("dots" saves matmul outputs) — both are
+    §Perf hillclimb knobs.
+    """
+
+    def grads_of(params, batch):
+        def loss_of(p):
+            return loss_fn(cfg, p, batch["inputs"], batch["labels"],
+                           act_spec=act_spec, remat_policy=remat_policy)
+        return jax.value_and_grad(loss_of)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch["inputs"])
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, caches, token, index):
+        return decode_step(cfg, params, caches, token, index)
+
+    return serve_step
+
+
+# ------------------------------------------------------------ input specs --
+
+def _token_struct(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.frontend == "none":
+        return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq, cfg.frontend_dim), PARAM_DTYPE)
+
+
+def abstract_params(cfg: ArchConfig, dtype=PARAM_DTYPE):
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(optimizer: AdamW, params_abs):
+    return jax.eval_shape(optimizer.init, params_abs)
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, ctx: int,
+                    dtype=PARAM_DTYPE):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, ctx, dtype=dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one cell's step inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "batch": {
+                "inputs": _token_struct(cfg, b, s),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            },
+        }
+    if shape.kind == "prefill":
+        return {"batch": {"inputs": _token_struct(cfg, b, s)}}
+    if shape.kind == "decode":
+        return {
+            "caches": abstract_caches(cfg, b, s),
+            "token": _token_struct(cfg, b, 1),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,14 @@
+"""repro.models — NN substrate for the assigned architecture pool."""
+
+from .attention import attn_forward, chunked_attention, init_attn
+from .layers import apply_rope, cross_entropy, rmsnorm, softcap, swiglu
+from .mamba import init_mamba, init_ssm_state, mamba_forward
+from .moe import init_moe, moe_forward
+from .transformer import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn, n_periods)
+
+__all__ = ["attn_forward", "chunked_attention", "init_attn", "apply_rope",
+           "cross_entropy", "rmsnorm", "softcap", "swiglu", "init_mamba",
+           "init_ssm_state", "mamba_forward", "init_moe", "moe_forward",
+           "decode_step", "forward", "init_decode_state", "init_params",
+           "loss_fn", "n_periods"]

@@ -1,0 +1,169 @@
+"""Attention layers: blockwise XLA implementation + Pallas fast path.
+
+The XLA path (``chunked_attention``) is an online-softmax scan over kv
+blocks — memory-bounded (never materializes S x S), shardable under
+pjit/GSPMD (heads on the "model" axis, batch/sequence on "data"), and lowers
+on every backend, so it is what the distributed train/serve steps and the
+multi-pod dry-run use.  On a real TPU the Pallas flash-attention kernel
+(``repro.kernels.flash_attention``) replaces it 1:1.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope, softcap
+
+_NEG_INF = -1e30
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      attn_softcap: float = 0.0, chunk: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention, scanning kv in blocks.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); GQA via head folding.
+    ``q_offset`` places the query block at absolute positions
+    ``q_offset + [0..Sq)`` (used by decode with a KV cache).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, d)
+    scale = 1.0 / (d ** 0.5)
+    if sq == 1:
+        # decode fast path: one softmax over the (possibly seq-sharded) KV
+        # cache — scores are (B, H, 1, S); the PV contraction reduces over
+        # the sharded seq dim with a tiny (B, H, 1, D) partial-sum
+        # all-reduce instead of gathering K/V chunks (§Perf, jamba decode)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32)
+        s = s * scale
+        if attn_softcap > 0.0:
+            s = softcap(s, attn_softcap)
+        k_pos = jnp.arange(skv)
+        q_pos = q_offset + jnp.zeros((), jnp.int32)
+        mask = jnp.ones((skv,), dtype=bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask[None, None, None, None, :], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+        return out.reshape(b, hq, sq, d).astype(q.dtype)
+    chunk = min(chunk, skv)
+    # pad kv to a multiple of chunk with masked slots
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nkv = (skv + pad) // chunk
+    kb = k.reshape(b, hkv, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        kc, vc, j = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc).astype(jnp.float32)
+        s = s * scale
+        if attn_softcap > 0.0:
+            s = softcap(s, attn_softcap)
+        k_pos = j * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        mask &= (k_pos < skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd",
+                                       p.astype(vc.dtype), vc)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq, 1), dtype=jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, d), dtype=jnp.float32)
+    # checkpoint per kv block: backward recomputes the S x chunk softmax
+    # instead of storing it (flash-attention memory behaviour in pure XLA)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (kb, vb, jnp.arange(nkv)))
+    out = acc / jnp.maximum(l_f, 1e-30)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array   # (d_model, Hq * D)
+    wk: jax.Array   # (d_model, Hkv * D)
+    wv: jax.Array   # (d_model, Hkv * D)
+    wo: jax.Array   # (Hq * D, d_model)
+
+
+def init_attn(cfg: ArchConfig, key, dtype) -> AttnParams:
+    d, hd = cfg.d_model, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return AttnParams(
+        wq=(jax.random.normal(k1, (d, cfg.n_heads * hd)) * s).astype(dtype),
+        wk=(jax.random.normal(k2, (d, cfg.n_kv_heads * hd)) * s).astype(dtype),
+        wv=(jax.random.normal(k3, (d, cfg.n_kv_heads * hd)) * s).astype(dtype),
+        wo=(jax.random.normal(k4, (cfg.n_heads * hd, d)) * s).astype(dtype),
+    )
+
+
+def attn_forward(cfg: ArchConfig, p: AttnParams, x: jax.Array, *,
+                 window: int = 0, positions: Optional[jax.Array] = None,
+                 kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                 cache_index: Optional[jax.Array] = None,
+                 mask_offset: Optional[jax.Array] = None):
+    """Self-attention with optional KV cache.
+
+    Training/prefill: ``kv_cache=None`` — full-sequence causal attention.
+    Decode: ``kv_cache=(K, V)`` of shape (B, Hkv, S_ctx, D); the current
+    token's k/v are written at ring slot ``cache_index``; ``mask_offset``
+    (default: ``cache_index``) is the highest cache slot considered "past" —
+    callers with a wrapped ring buffer pass ``S_ctx - 1`` to attend every
+    slot.  Returns (output, updated cache).
+    """
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    q = jnp.einsum("bsd,de->bse", x, p.wq).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", x, p.wk).reshape(b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", x, p.wv).reshape(b, s, cfg.n_kv_heads, hd)
+    if positions is None:
+        positions = jnp.arange(s) if cache_index is None \
+            else cache_index + jnp.arange(s)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    new_cache = None
+    if kv_cache is None:
+        out = chunked_attention(q, k, v, causal=cfg.causal, window=window,
+                                attn_softcap=cfg.attn_softcap)
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_index, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_index, axis=2)
+        new_cache = (ck, cv)
+        off = cache_index if mask_offset is None else mask_offset
+        out = chunked_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                causal=True, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_offset=off)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    # preferred_element_type pins the cross-shard partial-sum (and its TP
+    # all-reduce) to the activation dtype instead of f32 (§Perf: halves
+    # the dominant collective for TP configs)
+    return jnp.einsum("bse,ed->bsd", out, p.wo,
+                      preferred_element_type=out.dtype), new_cache

@@ -1,0 +1,140 @@
+"""Mamba-2 (SSD) block — pure-JAX chunked scan + O(1) decode step.
+
+The chunked formulation mirrors the Pallas kernel in
+``repro.kernels.ssd`` (which replaces the inner computation on real TPU):
+within chunks the recurrence is a masked decay-weighted matmul (MXU work),
+across chunks a (H, P, N) state is carried by ``lax.scan``.  Decode keeps
+the state explicitly — O(1) per token, which is what makes ``long_500k``
+runnable for SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+class MambaParams(NamedTuple):
+    in_proj: jax.Array    # (d_model, 2*d_inner + 2*G*N + H)
+    a_log: jax.Array      # (H,)
+    d_skip: jax.Array     # (H,)
+    dt_bias: jax.Array    # (H,)
+    norm_g: jax.Array     # (d_inner,) gated rmsnorm scale
+    out_proj: jax.Array   # (d_inner, d_model)
+
+
+def init_mamba(cfg: ArchConfig, key, dtype) -> MambaParams:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d ** -0.5
+    width = 2 * di + 2 * g * n + h
+    return MambaParams(
+        in_proj=(jax.random.normal(k1, (d, width)) * s).astype(dtype),
+        a_log=jnp.zeros((h,), dtype=jnp.float32),
+        d_skip=jnp.ones((h,), dtype=jnp.float32),
+        dt_bias=jnp.full((h,), -2.0, dtype=jnp.float32),
+        norm_g=jnp.zeros((di,), dtype=dtype),
+        out_proj=(jax.random.normal(k3, (di, d)) * di ** -0.5).astype(dtype),
+    )
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, g, n, h = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                   cfg.ssm_heads)
+    z, x, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * g * n],
+                             axis=-1)
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, x, b, c, dt
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int, h0=None):
+    """x: (B,L,H,P); dt: (B,L,H); a: (H,); b/c: (B,L,G,N).
+
+    Returns (y (B,L,H,P), h_final (B,H,P,N)).
+    """
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    nch = L // chunk
+    xr = x.reshape(B, nch, chunk, H, P)
+    dtr = dt.reshape(B, nch, chunk, H)
+    br = jnp.repeat(b, rep, axis=2).reshape(B, nch, chunk, H, N)
+    cr = jnp.repeat(c, rep, axis=2).reshape(B, nch, chunk, H, N)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]
+
+    def step(h, inp):
+        xc, dtc, bc_, cc = inp      # (B,chunk,H,P), (B,chunk,H), (B,chunk,H,N)
+        s = jnp.cumsum(a[None, None, :] * dtc, axis=1)       # (B,chunk,H)
+        seg = s[:, :, None, :] - s[:, None, :, :]            # (B,q,q,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        gmat = jnp.einsum("bihn,bjhn->bijh", cc, bc_) * decay \
+            * dtc[:, None, :, :]
+        y = jnp.einsum("bijh,bjhp->bihp", gmat, xc)
+        y = y + jnp.exp(s)[..., None] * jnp.einsum("bihn,bhpn->bihp", cc, h)
+        w = dtc * jnp.exp(s[:, -1:, :] - s)                  # (B,chunk,H)
+        h = jnp.exp(s[:, -1])[..., None, None] * h + jnp.einsum(
+            "bjhp,bjhn->bhpn", xc * w[..., None], bc_)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), dtype=jnp.float32)
+    hT, ys = jax.lax.scan(step, h0,
+                          (jnp.moveaxis(xr, 1, 0), jnp.moveaxis(dtr, 1, 0),
+                           jnp.moveaxis(br, 1, 0), jnp.moveaxis(cr, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, H, P)
+    return y, hT
+
+
+def mamba_forward(cfg: ArchConfig, p: MambaParams, x_in: jax.Array, *,
+                  state: Optional[jax.Array] = None,
+                  return_state: bool = False):
+    """x_in: (B, S, d_model).  Training/prefill: state=None.
+
+    Decode: S==1 and ``state`` (B, H, P, N) -> O(1) recurrence step.
+    """
+    Bsz, S, _ = x_in.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,dw->bsw", x_in, p.in_proj)
+    z, xi, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xh = xi.reshape(Bsz, S, h, pdim)
+    bg = bb.reshape(Bsz, S, g, n)
+    cg = cc.reshape(Bsz, S, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    a = -jnp.exp(p.a_log)
+
+    if S == 1 and state is not None:
+        rep = h // g
+        decay = jnp.exp(a[None, :] * dt[:, 0])               # (B, H)
+        b1 = jnp.repeat(bg[:, 0], rep, axis=1)               # (B, H, N)
+        c1 = jnp.repeat(cg[:, 0], rep, axis=1)
+        new_state = state * decay[..., None, None] + (
+            (dt[:, 0, :, None] * xh[:, 0])[..., None] * b1[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", new_state, c1)[:, None]
+    else:
+        chunk = min(cfg.ssm_chunk, S)
+        assert S % chunk == 0, (S, chunk)
+        y, new_state = _ssd_chunked(xh, dt, a, bg, cg, chunk, h0=state)
+
+    y = y + p.d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x_in.dtype)
+    # gated RMSNorm (Mamba-2 norm before out_proj)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + p.norm_g.astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", yf.astype(x_in.dtype), p.out_proj)
+    if return_state:
+        return out, new_state
+    return out
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int) -> jax.Array:
+    return jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                      cfg.ssm_state), dtype=jnp.float32)

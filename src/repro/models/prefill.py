@@ -1,0 +1,84 @@
+"""Prefill forward: populate decode caches + last-token logits.
+
+Unlike ``forward`` (training: full logits), prefill returns only the final
+position's logits — materializing (B, S, V) logits at 32k context would be
+absurd — plus the KV caches / SSM states the decode loop continues from.
+Window-capped caches keep the last ``ctx`` positions; all prefill lengths in
+the assignment are multiples of every cap, so ring slots align
+(slot = position % ctx).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import AttnParams, attn_forward
+from .layers import rmsnorm
+from .mamba import MambaParams, mamba_forward
+from .moe import MoEParams, moe_forward
+from .transformer import Params, _head, _embed
+from .layers import swiglu
+
+
+def _prefill_block(cfg: ArchConfig, spec, p, x):
+    """Like _block_forward but returns the kv/state produced."""
+    h = rmsnorm(x, p["ln1"])
+    if spec.mixer == "attn":
+        ap = p["attn"] if isinstance(p["attn"], AttnParams) \
+            else AttnParams(*p["attn"])
+        window = spec.window
+        if cfg.long_context_kv_cap and x.shape[1] > cfg.long_context_kv_cap:
+            window = min(window or cfg.long_context_kv_cap,
+                         cfg.long_context_kv_cap)
+        y, _ = attn_forward(cfg, ap, h, window=window)
+        # recompute k/v for the cache (cheap vs attention itself)
+        b, s, _ = h.shape
+        hd = cfg.head_dim_
+        from .layers import apply_rope
+        k = jnp.einsum("bsd,de->bse", h, ap.wk).reshape(
+            b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        k = apply_rope(k, jnp.arange(s), cfg.rope_theta)
+        v = jnp.einsum("bsd,de->bse", h, ap.wv).reshape(
+            b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        ctx = s
+        if cfg.long_context_kv_cap and s > cfg.long_context_kv_cap:
+            ctx = cfg.long_context_kv_cap
+        if spec.window:
+            ctx = min(ctx, spec.window)
+        cache = (k[:, :, -ctx:, :], v[:, :, -ctx:, :])
+    else:
+        y, state = mamba_forward(cfg, MambaParams(*p["ssm"]), h,
+                                 return_state=True)
+        cache = state
+    x = x + y
+    if spec.ffn == "none":
+        return x, cache
+    h = rmsnorm(x, p["ln2"])
+    y = 0.0
+    if spec.ffn in ("dense", "moe+dense"):
+        y = y + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+    if spec.ffn in ("moe", "moe+dense"):
+        y = y + moe_forward(cfg, MoEParams(*p["moe"]), h)
+    return x + y, cache
+
+
+def prefill(cfg: ArchConfig, params: Params, inputs: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Returns (last-token logits (B, 1, V), decode caches)."""
+    x = _embed(cfg, params, inputs)
+
+    def period(x, pblocks):
+        caches = {}
+        for pi, spec in enumerate(cfg.block_pattern):
+            x, c = _prefill_block(cfg, spec, pblocks[f"p{pi}"], x)
+            caches[f"p{pi}"] = c
+        return x, caches
+
+    x, caches = jax.lax.scan(period, x, params["blocks"])
+    logits = _head(cfg, params, x[:, -1:, :])
+    return logits, caches

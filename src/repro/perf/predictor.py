@@ -1,0 +1,53 @@
+"""Distributed-configuration predictor — the paper's algorithm selection
+(§4.5) applied at cluster scale.
+
+The paper ranks mathematically-equivalent blocked algorithms by summing
+per-kernel model estimates, never executing the candidates.  Here the
+"algorithms" are *sharding configurations* of one (arch x shape) cell —
+e.g. Megatron-TP vs pure-FSDP vs hybrid axis splits — and the "model" is
+the three-term roofline evaluated on each candidate's compiled dry-run:
+lowering + compiling takes seconds, executing a candidate on 256 chips to
+time it is what this avoids.  The predicted step time is
+``max(compute_s, memory_s, collective_s)`` (bound model; terms overlap on
+real hardware).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .roofline import RooflineTerms
+
+
+@dataclass(frozen=True)
+class ConfigCandidate:
+    """One sharding configuration: a name + a builder returning compiled."""
+
+    name: str
+    build: Callable[[], object]      # () -> (compiled, meta) or RooflineTerms
+    note: str = ""
+
+
+@dataclass
+class RankedConfig:
+    name: str
+    terms: RooflineTerms
+    note: str = ""
+
+    @property
+    def predicted_s(self) -> float:
+        return self.terms.bound_s
+
+
+def rank_configs(candidates: List[ConfigCandidate],
+                 extract: Callable[[object], RooflineTerms],
+                 ) -> List[RankedConfig]:
+    """Compile every candidate and sort by predicted step time."""
+    ranked = []
+    for cand in candidates:
+        built = cand.build()
+        terms = built if isinstance(built, RooflineTerms) else extract(built)
+        ranked.append(RankedConfig(cand.name, terms, cand.note))
+    ranked.sort(key=lambda r: r.predicted_s)
+    return ranked

@@ -1,0 +1,90 @@
+"""Model-based Pallas tile selection (the paper's block-size optimization
+applied to BlockSpec tiles).
+
+The paper tunes a blocked algorithm's block size b by predicting runtime
+over candidate b and taking the argmin (§4.6).  The TPU analogue tunes the
+matmul kernel's (bm, bn, bk): candidates are filtered by *legality* (MXU
+alignment + VMEM capacity — the cache-line/cache-size constraints of §3.1
+transplanted to the TPU memory hierarchy) and ranked by a three-term cost
+model; on hardware the same ranking would come from measured piecewise-
+polynomial models (``repro.core``), which this module can also consume.
+
+Cost model per grid step (napkin math recorded in EXPERIMENTS.md §Perf):
+
+* compute:   bm*bn*bk MACs at MXU efficiency eff(bm,bn,bk) — tiles below
+  128 in the contracted/lane dims waste systolic-array occupancy;
+* memory:    HBM->VMEM traffic: A tile + B tile per step; the output tile
+  is resident.  Total traffic = m*k*(n/bn) + k*n*(m/bm) + m*n — small
+  bm/bn re-stream the other operand;
+* overhead:  per-step fixed grid cost.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..kernels.matmul import tile_legal, vmem_bytes
+from .roofline import HBM_BW, PEAK_FLOPS
+
+_GRID_STEP_OVERHEAD_S = 1e-6
+_CANDIDATES = (128, 256, 512, 1024)
+
+
+def _mxu_eff(b: int) -> float:
+    """Systolic utilization of a tile dim (multiples of 128 are full)."""
+    return min(1.0, b / 128.0)
+
+
+@dataclass(frozen=True)
+class TileChoice:
+    bm: int
+    bn: int
+    bk: int
+    predicted_s: float
+
+
+def predict_tile_time(m: int, n: int, k: int, bm: int, bn: int,
+                      bk: int, itemsize: int = 2) -> float:
+    eff = _mxu_eff(min(bm, 128)) * _mxu_eff(min(bn, 128)) * \
+        _mxu_eff(min(bk, 128))
+    compute = 2.0 * m * n * k / (PEAK_FLOPS * eff)
+    traffic = itemsize * (m * k * (n / bn) + k * n * (m / bm) + m * n)
+    memory = traffic / HBM_BW
+    steps = (m // bm) * (n // bn) * (k // bk)
+    return max(compute, memory) + steps * _GRID_STEP_OVERHEAD_S
+
+
+def select_tiles(m: int, n: int, k: int, *,
+                 vmem_limit: int = 16 * 2 ** 20,
+                 candidates: Sequence[int] = _CANDIDATES,
+                 models=None) -> TileChoice:
+    """Pick (bm, bn, bk) without executing any candidate (the paper's
+    prediction-not-execution principle).
+
+    ``models`` may supply a measured :class:`repro.core.ModelSet` with a
+    "pallas_matmul" kernel; absent that, the analytic cost model ranks.
+    """
+    best: Optional[TileChoice] = None
+    for bm, bn, bk in itertools.product(candidates, repeat=3):
+        bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+        if not tile_legal(m, n, k, bm_, bn_, bk_, vmem_limit):
+            continue
+        if models is not None and "pallas_matmul" in models:
+            est = models.estimate("pallas_matmul", (bm_, bn_, bk_),
+                                  (m, n, k))
+            t = est["med"] * (m // bm_) * (n // bn_) * (k // bk_)
+        else:
+            t = predict_tile_time(m, n, k, bm_, bn_, bk_)
+        if best is None or t < best.predicted_s:
+            best = TileChoice(bm_, bn_, bk_, t)
+    if best is None:
+        raise ValueError(f"no legal tile for ({m},{n},{k}) "
+                         f"within VMEM {vmem_limit}")
+    return best
+
+
+def tile_table(shapes: Sequence[Tuple[int, int, int]],
+               **kw) -> Dict[Tuple[int, int, int], TileChoice]:
+    return {s: select_tiles(*s, **kw) for s in shapes}

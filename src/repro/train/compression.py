@@ -1,0 +1,66 @@
+"""Gradient compression for the slow cross-pod axis.
+
+int8 per-chunk-scaled quantization with **error feedback**: the
+quantization residual is carried to the next step so compression error
+does not bias convergence.  Intended for gradients synchronized over the
+"pod" axis where DCI bandwidth is an order of magnitude below ICI: wire
+bytes drop 4x (f32->int8) at the cost of two elementwise passes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 1024
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % CHUNK
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(chunks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape,
+                size: int) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Quantize grads+carried error; returns (quantized tree, new error)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = _quantize(g32)
+        deq = _dequantize(q, s, g.shape, g.size)
+        return (q, s), g32 - deq
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    e_leaves = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(leaves, e_leaves)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def decompress_tree(qtree: Any, like: Any) -> Any:
+    def one(qs, g):
+        q, s = qs
+        return _dequantize(q, s, g.shape, g.size).astype(g.dtype)
+
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    q_leaves = treedef.flatten_up_to(qtree)
+    return treedef.unflatten([one(q, g)
+                              for q, g in zip(q_leaves, leaves)])
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

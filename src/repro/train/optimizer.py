@@ -1,0 +1,74 @@
+"""AdamW optimizer (pytree-based, sharding-transparent).
+
+Optimizer state inherits the parameter sharding (moments are element-wise),
+so under FSDP-style parameter sharding the optimizer state is automatically
+ZeRO-sharded.  Master moments are kept in f32 regardless of the parameter
+dtype (bf16-safe training).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any        # first moment  (f32 pytree)
+    nu: Any        # second moment (f32 pytree)
+
+
+class AdamW(NamedTuple):
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), dtype=jnp.int32),
+                          mu=zeros,
+                          nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState,
+               params) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        # global-norm clip
+        if self.grad_clip > 0:
+            gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree_util.tree_leaves(grads))
+            gnorm = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        else:
+            scale = 1.0
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh = m / (1 - self.b1 ** step)
+            vh = v / (1 - self.b2 ** step)
+            u = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim > 1:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-self.lr * u).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

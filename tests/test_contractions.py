@@ -1,0 +1,83 @@
+"""Tests for Ch. 6: contraction algorithm generation + prediction."""
+
+import numpy as np
+import pytest
+
+from repro.core.contractions import (ContractionSpec, access_distance,
+                                     execute, execute_reference,
+                                     generate_algorithms,
+                                     predict_contraction,
+                                     rank_contraction_algorithms)
+
+RNG = np.random.default_rng(3)
+
+
+def test_paper_example_has_36_algorithms():
+    # C_abc := A_ai B_ibc has exactly 36 algorithms (Example 1.4)
+    spec = ContractionSpec.parse("abc=ai,ibc")
+    algs = generate_algorithms(spec)
+    assert len(algs) == 36
+    gemm = [a for a in algs if a.kernel == "gemm"]
+    assert len(gemm) == 2              # the two dgemm-based algorithms
+
+
+def test_parse_einsum_style():
+    spec = ContractionSpec.parse("ai,ibc->abc")
+    assert spec.contracted == ("i",)
+    assert spec.out_idx == "abc"
+    assert spec.flops({"a": 2, "b": 3, "c": 4, "i": 5}) == 2 * 2 * 3 * 4 * 5
+
+
+@pytest.mark.parametrize("expr,sizes", [
+    ("abc=ai,ibc", dict(a=24, b=20, c=16, i=8)),
+    ("a=iaj,ji", dict(a=16, i=8, j=12)),       # §6.3.2 vector contraction
+    ("abc=ija,jbic", dict(a=8, b=8, c=8, i=6, j=6)),  # §6.3.3 challenging
+])
+def test_all_algorithms_correct(expr, sizes):
+    spec = ContractionSpec.parse(expr)
+    algs = generate_algorithms(spec)
+    assert algs, expr
+    A = RNG.standard_normal([sizes[i] for i in spec.a_idx]
+                            ).astype(np.float32)
+    B = RNG.standard_normal([sizes[i] for i in spec.b_idx]
+                            ).astype(np.float32)
+    ref = execute_reference(spec, A, B)
+    # every algorithm computes the same contraction
+    for alg in algs[::3]:              # stride for speed; all kernels hit
+        got = execute(alg, A, B, sizes)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_access_distance_monotonic():
+    spec = ContractionSpec.parse("abc=ai,ibc")
+    algs = generate_algorithms(spec)
+    gemm = [a for a in algs if a.kernel == "gemm"][0]
+    d = access_distance(gemm, dict(a=100, b=100, c=100, i=8))
+    assert set(d) == {"A", "B", "C"}
+    assert all(v >= 0 for v in d.values())
+
+
+def test_prediction_positive_and_scales():
+    spec = ContractionSpec.parse("abc=ai,ibc")
+    algs = generate_algorithms(spec)
+    gemm = [a for a in algs if a.kernel == "gemm"][0]
+    dot = [a for a in algs if a.kernel == "dot"][0]
+    sizes = dict(a=32, b=32, c=32, i=8)
+    t_gemm = predict_contraction(gemm, sizes, repetitions=3)
+    t_dot = predict_contraction(dot, sizes, repetitions=3)
+    assert t_gemm > 0 and t_dot > 0
+    # a dot-based algorithm makes ~32x32x32 tiny calls: predicted slower
+    assert t_dot > t_gemm
+
+
+def test_ranking_prefers_fewer_larger_calls():
+    spec = ContractionSpec.parse("abc=ai,ibc")
+    sizes = dict(a=32, b=32, c=32, i=8)
+    algs = generate_algorithms(spec)
+    pick = ([a for a in algs if a.kernel == "gemm"][:1] +
+            [a for a in algs if a.kernel == "dot"][:1] +
+            [a for a in algs if a.kernel == "ger"][:1])
+    ranked = rank_contraction_algorithms(spec, sizes, algorithms=pick,
+                                         repetitions=3)
+    assert ranked[0][0].kernel in ("gemm", "ger")
+    assert ranked[-1][0].kernel == "dot"

@@ -1,0 +1,83 @@
+"""Unit tests: model structure, prediction statistics, selection (§4.1/4.5)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Domain, KernelCall, ModelSet, PerformanceModel,
+                        Piece, Stats, fit_relative, monomial_basis,
+                        optimize_block_size, performance_yield,
+                        predict_efficiency, predict_performance,
+                        predict_runtime, rank_algorithms)
+
+
+def _make_model(kernel="k", coef=1e-9, const=1e-6):
+    pts = np.array([[x, y] for x in (8, 64, 128, 256, 512)
+                    for y in (8, 64, 128, 256, 512)], dtype=float)
+    vals = coef * pts[:, 0] ** 2 * pts[:, 1] + const
+    basis = monomial_basis([(2, 1)])
+    polys = {s: fit_relative(pts, vals, basis)
+             for s in ("min", "med", "max", "mean")}
+    std = fit_relative(pts, np.full(len(pts), const * 0.01), [(0, 0)])
+    polys["std"] = std
+    m = PerformanceModel(kernel=kernel)
+    m.add_piece(("C",), Piece(Domain((8, 8), (512, 512)), polys))
+    return m
+
+
+def test_estimate_and_degenerate():
+    ms = ModelSet({"k": _make_model()})
+    est = ms.estimate("k", ("C",), (128, 128))
+    true = 1e-9 * 128 ** 2 * 128 + 1e-6
+    assert est["med"] == pytest.approx(true, rel=1e-6)
+    # zero-size call estimates 0 (Example 4.1)
+    assert ms.estimate("k", ("C",), (0, 128))["med"] == 0.0
+
+
+def test_prediction_statistics_propagate():
+    ms = ModelSet({"k": _make_model()})
+    calls = [KernelCall("k", ("C",), (128, 128))] * 4
+    rt = predict_runtime(calls, ms)
+    one = ms.estimate("k", ("C",), (128, 128))
+    assert rt.med == pytest.approx(4 * one["med"], rel=1e-9)
+    # std adds in quadrature (Eq 4.3)
+    assert rt.std == pytest.approx(2 * one["std"], rel=1e-9)
+
+
+def test_performance_and_efficiency():
+    rt = Stats(min=1.0, med=2.0, max=4.0, mean=2.0, std=0.1)
+    perf = predict_performance(rt, cost_flops=8.0)
+    assert perf["max"] == pytest.approx(8.0)   # cost / t_min
+    assert perf["min"] == pytest.approx(2.0)   # cost / t_max
+    eff = predict_efficiency(perf, peak_flops=8.0)
+    assert eff["max"] == pytest.approx(1.0)
+
+
+def test_ranking_and_block_size():
+    ms = ModelSet({"fast": _make_model("fast", coef=1e-9),
+                   "slow": _make_model("slow", coef=3e-9)})
+
+    def tracer_for(kernel):
+        def tracer(n, b):
+            return [KernelCall(kernel, ("C",), (b, n))
+                    for _ in range(max(1, n // b))]
+        return tracer
+
+    ranked = rank_algorithms({"a_slow": tracer_for("slow"),
+                              "a_fast": tracer_for("fast")}, ms, 512, 64)
+    assert ranked[0].name == "a_fast"
+
+    # block-size optimization: model has n^2 b cost + const per call =>
+    # larger b fewer calls but b^2 cost; optimum interior or boundary
+    b_pred, profile = optimize_block_size(tracer_for("fast"), ms, 512,
+                                          [8, 16, 32, 64, 128, 256])
+    assert b_pred == min(profile, key=profile.get)
+
+    measured = {b: profile[b] * 1.02 for b in profile}  # consistent meas.
+    b_opt, yld = performance_yield(measured, b_pred)
+    assert yld == pytest.approx(1.0)
+
+
+def test_model_set_missing_case():
+    ms = ModelSet({"k": _make_model()})
+    with pytest.raises(KeyError):
+        ms.estimate("k", ("MISSING",), (64, 64))

@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (assignment requirement): reduced configs,
+one forward/train step on CPU, output shapes + no NaNs; decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_configs, get_config, reduced
+from repro.launch.steps import make_train_step
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn)
+from repro.train.optimizer import AdamW
+
+ARCHS = sorted(all_configs())
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, b, s, key=KEY):
+    if cfg.frontend == "none":
+        return jax.random.randint(key, (b, s), 0, cfg.vocab)
+    return jax.random.normal(key, (b, s, cfg.frontend_dim),
+                             dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, KEY, dtype=jnp.float32)
+    b, s = 2, 64
+    logits = forward(cfg, params, _inputs(cfg, b, s))
+    assert logits.shape == (b, s, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, KEY, dtype=jnp.float32)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    b, s = 2, 64
+    batch = {"inputs": _inputs(cfg, b, s),
+             "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+    params2, opt_state2, loss = step(params, opt_state, batch)
+    assert np.isfinite(float(loss))
+    # parameters actually changed
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    l1 = jax.tree_util.tree_leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).causal])
+def test_decode_matches_forward(arch):
+    """Prefill-by-decode must reproduce the full-forward logits."""
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, KEY, dtype=jnp.float32)
+    b, s = 2, 16
+    toks = _inputs(cfg, b, s)
+    full = forward(cfg, params, toks)
+    caches = init_decode_state(cfg, b, 32, dtype=jnp.float32)
+    last = None
+    for i in range(s):
+        tok = toks[:, i:i + 1]
+        last, caches = decode_step(cfg, params, caches, tok,
+                                   jnp.asarray(i, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shape_assignments_respect_family(arch):
+    cfg = get_config(arch)
+    if not cfg.causal:
+        assert "decode_32k" not in cfg.shapes
+        assert "long_500k" not in cfg.shapes
+    if cfg.family in ("ssm", "hybrid"):
+        assert "long_500k" in cfg.shapes
+    for s in cfg.shapes:
+        assert s in SHAPES
+
+
+def test_gemma2_alternates_local_global():
+    cfg = get_config("gemma2-27b")
+    specs = cfg.layer_specs()
+    assert specs[0].window == 4096 and specs[1].window == 0
+    assert cfg.attn_softcap == 50.0 and cfg.logit_softcap == 30.0
+
+
+def test_jamba_pattern_ratio():
+    cfg = get_config("jamba-v0.1-52b")
+    specs = cfg.layer_specs()
+    attn = sum(1 for s in specs if s.mixer == "attn")
+    assert attn * 7 == (len(specs) - attn)          # 1:7
+    moe = sum(1 for s in specs if s.ffn == "moe")
+    assert moe == len(specs) // 2                    # every other layer
+
+
+def test_arctic_moe_plus_dense():
+    cfg = get_config("arctic-480b")
+    assert all(s.ffn == "moe+dense" for s in cfg.layer_specs())
+    assert cfg.n_experts == 128 and cfg.top_k == 2
+
+
+def test_param_counts_close_to_published():
+    expected = {"deepseek-7b": 7, "gemma2-27b": 27, "grok-1-314b": 314,
+                "arctic-480b": 480, "mamba2-2.7b": 2.7,
+                "jamba-v0.1-52b": 52, "phi3-mini-3.8b": 3.8,
+                "phi3-medium-14b": 14, "chameleon-34b": 34}
+    for arch, bn in expected.items():
+        n = get_config(arch).param_count() / 1e9
+        assert abs(n - bn) / bn < 0.15, (arch, n, bn)

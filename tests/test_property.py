@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.contractions import (ContractionSpec, execute,
+                                     execute_reference,
+                                     generate_algorithms)
+from repro.core.fitting import fit_relative, monomial_basis, relative_errors
+from repro.core.grids import Domain, grid_points
+from repro.core.sampler import Stats
+from repro.train.compression import compress_tree, decompress_tree, init_error
+
+import jax.numpy as jnp
+
+
+@settings(max_examples=25, deadline=None)
+@given(lo=st.integers(8, 256), width=st.integers(16, 2048),
+       n=st.integers(2, 7),
+       kind=st.sampled_from(["cartesian", "chebyshev"]))
+def test_grid_points_inside_and_rounded(lo, width, n, kind):
+    dom = Domain((lo,), (lo + width,))
+    pts = grid_points(dom, (n,), kind=kind, round_to=8)
+    assert pts, (lo, width, n)
+    for p in pts:
+        assert dom.contains(p)
+        assert p[0] % 8 == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(lo=st.tuples(st.integers(8, 128), st.integers(8, 128)),
+       w=st.tuples(st.integers(64, 1024), st.integers(64, 1024)))
+def test_domain_split_partitions(lo, w):
+    dom = Domain(lo, (lo[0] + w[0], lo[1] + w[1]))
+    a, b, d = dom.split()
+    # the two halves share exactly the split plane and cover the domain
+    assert a.lo == dom.lo and b.hi == dom.hi
+    assert a.hi[d] == b.lo[d]
+    assert a.widths()[d] < dom.widths()[d]
+    assert b.widths()[d] < dom.widths()[d]
+
+
+@settings(max_examples=20, deadline=None)
+@given(samples=st.lists(st.floats(1e-6, 1e3), min_size=1, max_size=50))
+def test_stats_invariants(samples):
+    s = Stats.from_samples(samples)
+    assert s.min <= s.med <= s.max
+    assert s.min <= s.mean <= s.max
+    assert s.std >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(coefs=st.lists(st.floats(1e-9, 1e-3), min_size=3, max_size=3),
+       seed=st.integers(0, 100))
+def test_exact_polynomials_fit_exactly(coefs, seed):
+    """Relative LSQ recovers any positive polynomial in the basis span."""
+    rng = np.random.default_rng(seed)
+    pts = rng.integers(8, 512, size=(30, 1)).astype(float)
+    c0, c1, c2 = coefs
+    y = c0 + c1 * pts[:, 0] + c2 * pts[:, 0] ** 2
+    poly = fit_relative(pts, y, monomial_basis([(2,)]))
+    assert relative_errors(poly, pts, y).max() < 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_contraction_algorithms_agree(seed):
+    """Every generated algorithm computes the same contraction."""
+    rng = np.random.default_rng(seed)
+    spec = ContractionSpec.parse("ab=ai,ib")
+    sizes = dict(a=int(rng.integers(2, 10)), b=int(rng.integers(2, 10)),
+                 i=int(rng.integers(2, 8)))
+    A = rng.standard_normal((sizes["a"], sizes["i"])).astype(np.float32)
+    B = rng.standard_normal((sizes["i"], sizes["b"])).astype(np.float32)
+    ref = execute_reference(spec, A, B)
+    for alg in generate_algorithms(spec):
+        got = execute(alg, A, B, sizes)
+        np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), rows=st.integers(1, 40),
+       cols=st.integers(1, 40))
+def test_compression_bounded_error(seed, rows, cols):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((rows, cols)), jnp.float32)}
+    q, err = compress_tree(g, init_error(g))
+    deq = decompress_tree(q, g)
+    # int8 with per-chunk scales: max error <= scale/2 <= max|x|/254
+    max_err = float(jnp.max(jnp.abs(deq["w"] - g["w"])))
+    bound = float(jnp.max(jnp.abs(g["w"]))) / 127.0 + 1e-7
+    assert max_err <= bound

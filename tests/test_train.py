@@ -1,0 +1,132 @@
+"""Training-substrate tests: loop, checkpointing, data, fault tolerance."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.train import checkpoint as ck
+from repro.train.compression import (compress_tree, decompress_tree,
+                                     init_error)
+from repro.train.data import DataConfig, batch_at
+from repro.train.optimizer import AdamW, apply_updates
+from repro.train.train_loop import TrainConfig, train
+
+
+def _cfg():
+    return reduced(get_config("deepseek-7b"), n_layers=2, d_model=64,
+                   d_ff=128, vocab=256)
+
+
+def test_data_determinism_and_skip_ahead():
+    dc = DataConfig(vocab=256, seq_len=32, global_batch=4, seed=7)
+    b1 = batch_at(dc, 5)
+    b2 = batch_at(dc, 5)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    b3 = batch_at(dc, 6)
+    assert not np.array_equal(b1["inputs"], b3["inputs"])
+    # labels are next-token shifted inputs
+    np.testing.assert_array_equal(b1["inputs"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_loss_decreases():
+    cfg = _cfg()
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    tc = TrainConfig(steps=30)
+    _, _, report = train(cfg, dc, tc)
+    assert len(report.losses) == 30
+    assert report.losses[-1] < report.losses[0]
+    assert not report.skipped_nan_steps
+
+
+def test_checkpoint_roundtrip_and_crc(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4))}}
+    ck.save(str(tmp_path), 3, tree)
+    restored, step = ck.restore(str(tmp_path), tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    # corrupt a leaf -> restore must fail CRC
+    victim = next(tmp_path.glob("step_*/arr_00000.npy"))
+    data = bytearray(victim.read_bytes())
+    data[-1] ^= 0xFF
+    victim.write_bytes(bytes(data))
+    assert ck.latest_step(str(tmp_path)) is None
+    with pytest.raises(Exception):
+        ck.restore(str(tmp_path), tree, step=3)
+
+
+def test_checkpoint_keep_n_and_latest(tmp_path):
+    tree = {"a": jnp.zeros(4)}
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, tree, keep=2)
+    dirs = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(dirs) == 2
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_resume_after_interrupt(tmp_path):
+    cfg = _cfg()
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    # phase 1: 10 steps with checkpointing every 5
+    tc1 = TrainConfig(steps=10, ckpt_dir=str(tmp_path), ckpt_every=5)
+    _, _, rep1 = train(cfg, dc, tc1)
+    assert ck.latest_step(str(tmp_path)) == 9
+    # phase 2 (simulated restart after failure): resumes from step 9
+    tc2 = TrainConfig(steps=20, ckpt_dir=str(tmp_path), ckpt_every=5)
+    _, _, rep2 = train(cfg, dc, tc2)
+    assert rep2.resumed_from == 9
+    assert len(rep2.losses) == 10          # only the remaining steps
+
+
+def test_async_checkpointer(tmp_path):
+    tree = {"w": jnp.arange(100.0)}
+    ac = ck.AsyncCheckpointer(str(tmp_path))
+    ac.save_async(1, tree)
+    ac.wait()
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_compression_roundtrip_error_feedback():
+    params = {"w": jnp.ones((64, 33)), "b": jnp.zeros((7,))}
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(np.random.default_rng(0).standard_normal(
+            p.shape), jnp.float32), params)
+    err = init_error(params)
+    q, err1 = compress_tree(grads, err)
+    deq = decompress_tree(q, grads)
+    rel = (jnp.linalg.norm(deq["w"] - grads["w"]) /
+           jnp.linalg.norm(grads["w"]))
+    assert float(rel) < 0.02                # int8 per-chunk quantization
+    # error feedback: residual equals exactly what was lost
+    np.testing.assert_allclose(np.asarray(err1["w"]),
+                               np.asarray(grads["w"] - deq["w"]),
+                               atol=1e-6)
+
+
+def test_nan_circuit_breaker():
+    cfg = _cfg()
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    opt = AdamW(lr=1e-3)
+
+    calls = {"n": 0}
+
+    from repro.launch.steps import make_train_step
+    inner = jax.jit(make_train_step(cfg, opt))
+
+    def poisoned(params, opt_state, batch):
+        calls["n"] += 1
+        p, o, loss = inner(params, opt_state, batch)
+        if calls["n"] == 3:
+            return p, o, jnp.asarray(float("nan"))
+        return p, o, loss
+
+    tc = TrainConfig(steps=6)
+    _, _, report = train(cfg, dc, tc, opt=opt, train_step=poisoned)
+    assert report.skipped_nan_steps == [2]
+    assert len(report.losses) == 5
