@@ -62,6 +62,14 @@ def run(report: List[str]) -> None:
         ranked = rank_algorithms(tracers, ms, N, B)
         t_pred = time.perf_counter() - t0
         t0 = time.perf_counter()
+        ranked_scalar = rank_algorithms(tracers, ms, N, B, batched=False)
+        t_pred_scalar = time.perf_counter() - t0
+        # numerically tied variants may swap winners between the two paths'
+        # summation orders — only a >1e-9 relative disagreement is a bug
+        assert (ranked_scalar[0].name == ranked[0].name
+                or abs(ranked_scalar[0].runtime.med - ranked[0].runtime.med)
+                <= 1e-9 * max(ranked_scalar[0].runtime.med, 1e-300))
+        t0 = time.perf_counter()
         measured = _measure_all(catalog)
         t_meas = time.perf_counter() - t0
         pred_winner = ranked[0].name
@@ -75,7 +83,9 @@ def run(report: List[str]) -> None:
             f"{catalog:10s} algs={len(tracers)} "
             f"pred_winner={pred_winner:8s} meas_winner={meas_winner:8s} "
             f"agree={'Y' if within else 'N'} spread={spread:5.2f}x "
-            f"pred_time={t_pred * 1e3:7.1f}ms meas_time={t_meas:5.1f}s "
+            f"pred_time={t_pred * 1e3:7.1f}ms "
+            f"(scalar {t_pred_scalar * 1e3:7.1f}ms, "
+            f"{t_pred_scalar / t_pred:4.0f}x) meas_time={t_meas:5.1f}s "
             f"speedup={t_meas / t_pred:7.0f}x")
 
 

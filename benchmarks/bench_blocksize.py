@@ -38,18 +38,35 @@ def _measured_profile(kind: str, n: int) -> Dict[int, float]:
 
 
 def run(report: List[str]) -> None:
+    import time
+
     ms, _ = build_model_set()
     for kind, tracer in (("potrf", potrf_tracer(3)),
                          ("trtri", trtri_tracer(3))):
         for n in SIZES:
+            t0 = time.perf_counter()
             b_pred, profile = optimize_block_size(tracer, ms, n, CANDIDATES)
+            t_batched = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            b_scalar, prof_scalar = optimize_block_size(tracer, ms, n,
+                                                        CANDIDATES,
+                                                        batched=False)
+            t_scalar = time.perf_counter() - t0
+            # candidates tied at float level may swap argmins between the
+            # paths; the two profiles at either argmin must still agree
+            assert (b_scalar == b_pred
+                    or abs(prof_scalar[b_scalar] - profile[b_pred])
+                    <= 1e-9 * max(prof_scalar[b_scalar], 1e-300)), \
+                (b_scalar, b_pred)
             measured = _measured_profile(kind, n)
             b_opt, yld = performance_yield(measured, b_pred)
             report.append(
                 f"{kind} n={n:4d}: b_pred={b_pred:3d} b_opt={b_opt:3d} "
                 f"yield={yld:6.1%} "
                 f"(t_pred(b)={profile[b_pred] * 1e3:.2f}ms "
-                f"t_meas(b_pred)={measured[b_pred] * 1e3:.2f}ms)")
+                f"t_meas(b_pred)={measured[b_pred] * 1e3:.2f}ms "
+                f"sweep {t_scalar * 1e3:.1f}ms->{t_batched * 1e3:.1f}ms "
+                f"{t_scalar / t_batched:.0f}x)")
 
 
 def main() -> None:

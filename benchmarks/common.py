@@ -17,6 +17,19 @@ from repro.dla.kernels import KERNELS
 ROOT = Path(__file__).resolve().parents[1]
 MODEL_DIR = ROOT / "experiments" / "models"
 
+#: smoke mode: tiny sizes, single repetition, measurement-free models —
+#: toggled by ``benchmarks.run --smoke`` so CI can track the perf trajectory
+SMOKE = False
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
+
+
+def is_smoke() -> bool:
+    return SMOKE
+
 #: the kernel/case catalog every blocked algorithm in the benchmarks needs
 DEFAULT_SPECS: List[Tuple[str, Tuple, Tuple[int, ...], Tuple[int, ...]]] = [
     ("potf2", (("L",),), (16,), (304,)),
@@ -80,6 +93,8 @@ def build_model_set(specs=DEFAULT_SPECS,
 
 
 def median_time(fn, repetitions: int = 5) -> float:
+    if SMOKE:
+        repetitions = 1
     fn()  # warm-up
     ts = []
     for _ in range(repetitions):
@@ -87,6 +102,53 @@ def median_time(fn, repetitions: int = 5) -> float:
         fn()
         ts.append(time.perf_counter() - t0)
     return sorted(ts)[len(ts) // 2]
+
+
+#: synthetic-model calibration: an arbitrary but fixed machine balance
+SYNTH_RATE_FLOPS = 5e10
+SYNTH_OVERHEAD_S = 2e-6
+
+
+def synthetic_model_set(specs=DEFAULT_SPECS,
+                        points_per_dim: int = 5) -> ModelSet:
+    """Measurement-free model set fitted to analytic flop counts.
+
+    Every kernel/case in ``specs`` gets two polynomial pieces (the domain is
+    bisected once) fitted to ``flops / rate + overhead`` with slightly spread
+    per-statistic factors, through the real relative-LSQ pipeline — so bases,
+    scales and piece lookup behave exactly like measured models, without
+    timing a single kernel.  Prediction-path benchmarks and the CI smoke lane
+    run on this set.
+    """
+    from repro.core import Piece, fit_relative, monomial_basis
+    from repro.core.grids import grid_points
+    from repro.dla.kernels import kernel_flops
+
+    stat_factor = {"min": 0.97, "med": 1.0, "max": 1.08, "mean": 1.01}
+    ms = ModelSet()
+    for name, cases, lo, hi in specs:
+        kd = KERNELS[name]
+        model = PerformanceModel(kernel=name, setup="synthetic")
+        for case in cases:
+            basis = monomial_basis(kd.cost_exponents(case))
+            dom = Domain(lo, hi)
+            lo_half, hi_half, _ = dom.split()
+            for sub in (lo_half, hi_half):
+                pts = grid_points(sub, [points_per_dim] * dom.ndim,
+                                  kind="cartesian", round_to=8)
+                arr = np.asarray(pts, dtype=np.float64)
+                base = np.asarray([kernel_flops(name, case, p) for p in pts])
+                # analytic counts can dip negative outside a kernel's valid
+                # shape regime (e.g. getf2 panels wider than tall): floor them
+                base = np.maximum(base, 1.0) / SYNTH_RATE_FLOPS \
+                    + SYNTH_OVERHEAD_S
+                polys = {s: fit_relative(arr, base * f, basis)
+                         for s, f in stat_factor.items()}
+                polys["std"] = fit_relative(
+                    arr, np.maximum(base * 0.02, 1e-9), basis)
+                model.add_piece(case, Piece(domain=sub, polys=polys))
+        ms.add(model)
+    return ms
 
 
 def spd(n: int, seed: int = 0) -> np.ndarray:

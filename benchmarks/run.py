@@ -1,18 +1,25 @@
 """Benchmark driver: one section per paper table/figure.
 
 Run with ``PYTHONPATH=src python -m benchmarks.run [--only <name>]``.
+
+``--smoke`` runs a measurement-free fast lane (tiny sizes, 1 repetition,
+synthetic models) and writes a ``BENCH_smoke.json`` artifact so CI can track
+the prediction-path performance trajectory per PR without touching real
+kernel timings.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 import traceback
 
-from . import (bench_algorithm_selection, bench_blocksize,
-               bench_cache_effects, bench_contractions,
+from . import (bench_algorithm_selection, bench_batched_sweep,
+               bench_blocksize, bench_cache_effects, bench_contractions,
                bench_model_accuracy, bench_prediction_accuracy,
-               bench_roofline, bench_tile_tuner)
+               bench_roofline, bench_tile_tuner, common)
 
 SUITES = {
     "model_accuracy": (bench_model_accuracy,
@@ -25,6 +32,8 @@ SUITES = {
                             "paper §4.5: variant ranking + speedup"),
     "blocksize": (bench_blocksize,
                   "paper §4.6: block-size optimization yield"),
+    "batched_sweep": (bench_batched_sweep,
+                      "beyond-paper: batched engine vs scalar prediction"),
     "contractions": (bench_contractions,
                      "paper Ch 6: contraction micro-benchmark prediction"),
     "tile_tuner": (bench_tile_tuner,
@@ -33,25 +42,65 @@ SUITES = {
                  "deliverable (g): per-cell roofline table"),
 }
 
+#: suites that run without any kernel measurement — the CI smoke lane
+SMOKE_SUITES = ("batched_sweep",)
+
+
+def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:
+    print(f"\n===== {name}: {desc} =====", flush=True)
+    t0 = time.perf_counter()
+    report: list = []
+    metrics: dict = {}
+    ok = True
+    try:
+        if smoke and name in SMOKE_SUITES:
+            mod.run(report, results=metrics)
+        else:
+            mod.run(report)
+        print("\n".join(report))
+    except Exception:
+        ok = False
+        traceback.print_exc()
+    seconds = time.perf_counter() - t0
+    print(f"[{name}: {seconds:.1f}s]", flush=True)
+    return {"ok": ok, "seconds": seconds, "report": report,
+            "metrics": metrics}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, 1 repetition, synthetic models; "
+                         "writes the BENCH_smoke.json artifact")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="smoke-artifact path (with --smoke)")
     args = ap.parse_args()
-    failures = 0
-    for name, (mod, desc) in SUITES.items():
-        if args.only and name != args.only:
-            continue
-        print(f"\n===== {name}: {desc} =====", flush=True)
-        t0 = time.perf_counter()
-        try:
-            report = []
-            mod.run(report)
-            print("\n".join(report))
-        except Exception:
-            failures += 1
-            traceback.print_exc()
-        print(f"[{name}: {time.perf_counter() - t0:.1f}s]", flush=True)
+    if args.smoke:
+        common.set_smoke(True)
+    if args.only and args.only not in SUITES:
+        raise SystemExit(f"unknown suite {args.only!r}; "
+                         f"choose from: {', '.join(SUITES)}")
+    names = [n for n in SUITES
+             if (not args.only or n == args.only)
+             and (not args.smoke or n in SMOKE_SUITES)]
+    if not names:
+        raise SystemExit(f"no suites selected ({args.only!r} is not in the "
+                         f"smoke lane: {', '.join(SMOKE_SUITES)})")
+    results = {name: _run_suite(name, *SUITES[name], smoke=args.smoke)
+               for name in names}
+    failures = sum(not r["ok"] for r in results.values())
+    if args.smoke:
+        artifact = {
+            "mode": "smoke",
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "suites": results,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"\nwrote {args.out}")
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

@@ -6,13 +6,15 @@ blocked-algorithm runtime, algorithm ranking, block-size optimization, and
 cache-aware micro-benchmarks for tensor contractions.
 """
 
-from .fitting import (Polynomial, error_measure, fit_relative, monomial_basis,
-                      relative_errors)
+from .fitting import (Polynomial, StackedPolynomials, error_measure,
+                      fit_relative, monomial_basis, relative_errors,
+                      stack_polynomials)
 from .grids import Domain, grid_points
 from .model import CaseModel, ModelSet, PerformanceModel, Piece
 from .modelgen import (GenerationReport, KernelBenchmark, generate_model,
                        generate_model_set)
-from .predict import (KernelCall, absolute_relative_error,
+from .predict import (CompiledCalls, KernelCall, PredictionEngine,
+                      absolute_relative_error, compile_calls,
                       predict_efficiency, predict_performance,
                       predict_runtime, relative_error)
 from .refinement import GeneratorConfig, refine, stats_sample_fn
@@ -22,10 +24,12 @@ from .selection import (RankedAlgorithm, optimize_algorithm_and_block_size,
                         rank_algorithms, select_algorithm)
 
 __all__ = [
-    "Polynomial", "error_measure", "fit_relative", "monomial_basis",
-    "relative_errors", "Domain", "grid_points", "CaseModel", "ModelSet",
+    "Polynomial", "StackedPolynomials", "error_measure", "fit_relative",
+    "monomial_basis", "relative_errors", "stack_polynomials", "Domain",
+    "grid_points", "CaseModel", "ModelSet",
     "PerformanceModel", "Piece", "GenerationReport", "KernelBenchmark",
-    "generate_model", "generate_model_set", "KernelCall",
+    "generate_model", "generate_model_set", "CompiledCalls", "KernelCall",
+    "PredictionEngine", "compile_calls",
     "absolute_relative_error", "predict_efficiency", "predict_performance",
     "predict_runtime", "relative_error", "GeneratorConfig", "refine",
     "stats_sample_fn", "STATS", "Stats", "measure_calls", "measure_single",

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -85,6 +85,46 @@ class Polynomial:
         return Polynomial(tuple(tuple(b) for b in d["basis"]),
                           np.asarray(d["coeffs"], dtype=np.float64),
                           np.asarray(d["scale"], dtype=np.float64))
+
+
+@dataclass(frozen=True)
+class StackedPolynomials:
+    """Several polynomials evaluated together on one batch of points.
+
+    Polynomials sharing a (basis, scale) pair are stacked into a single
+    coefficient matrix so one design matrix and one matmul produce all of
+    their values — the core primitive of the batched prediction engine.
+    Heterogeneous bases (e.g. a constant-only std polynomial next to full
+    cost-bounded stat polynomials) fall into separate groups and still
+    evaluate with one design matrix per group, not one per polynomial.
+    """
+
+    #: per group: (basis, scale, coeff matrix (M, k), output column indices)
+    groups: Tuple[Tuple[Tuple[Exponents, ...], np.ndarray, np.ndarray,
+                        Tuple[int, ...]], ...]
+    n_out: int
+
+    def __call__(self, points: np.ndarray) -> np.ndarray:
+        """Evaluate all stacked polynomials: (N, d) points -> (N, n_out)."""
+        pts = np.atleast_2d(np.asarray(points, dtype=np.float64))
+        out = np.empty((pts.shape[0], self.n_out), dtype=np.float64)
+        for basis, scale, coeff_mat, cols in self.groups:
+            X = _design_matrix(pts, basis, scale)
+            out[:, cols] = X @ coeff_mat
+        return out
+
+
+def stack_polynomials(polys: Sequence[Polynomial]) -> StackedPolynomials:
+    """Compile polynomials into grouped coefficient matrices for batch eval."""
+    by_key: Dict[Tuple, list] = {}
+    for j, p in enumerate(polys):
+        by_key.setdefault((p.basis, tuple(p.scale)), []).append(j)
+    groups = []
+    for (basis, scale), cols in by_key.items():
+        coeff_mat = np.stack([polys[j].coeffs for j in cols], axis=1)
+        groups.append((basis, np.asarray(scale, dtype=np.float64),
+                       coeff_mat, tuple(cols)))
+    return StackedPolynomials(tuple(groups), len(polys))
 
 
 def fit_relative(points: Sequence[Sequence[float]], values: Sequence[float],

@@ -16,7 +16,7 @@ from typing import Dict, Hashable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .fitting import Polynomial
+from .fitting import Polynomial, StackedPolynomials, stack_polynomials
 from .grids import Domain
 from .sampler import STATS
 
@@ -34,6 +34,19 @@ class Piece:
         return {s: max(float(p(np.asarray(sizes, dtype=np.float64)[None, :])),
                        0.0)
                 for s, p in self.polys.items()}
+
+    def _stacked(self) -> StackedPolynomials:
+        """Lazily compiled batch evaluator over the canonical STATS order."""
+        cached = self.__dict__.get("_stacked_cache")
+        if cached is None:
+            cached = stack_polynomials([self.polys[s] for s in STATS])
+            object.__setattr__(self, "_stacked_cache", cached)
+        return cached
+
+    def estimate_batch(self, sizes: np.ndarray) -> np.ndarray:
+        """Estimates for (N, d) size points: (N, len(STATS)), clipped at 0."""
+        pts = np.atleast_2d(np.asarray(sizes, dtype=np.float64))
+        return np.maximum(self._stacked()(pts), 0.0)
 
 
 @dataclass
@@ -61,6 +74,52 @@ class CaseModel:
             if best_d is None or d < best_d:
                 best, best_d = piece, d
         return best
+
+    # ----------------------------------------------------------- batched --
+    def piece_indices(self, sizes: np.ndarray,
+                      *, extrapolate: bool = True) -> np.ndarray:
+        """Vectorized piece lookup for (N, d) size points.
+
+        Mirrors the scalar path exactly: the first containing piece wins;
+        rows outside every domain are clamped to the piece with the smallest
+        squared clamp distance (first piece on ties, like ``nearest_piece``).
+        """
+        if not self.pieces:
+            raise KeyError("empty case model")
+        pts = np.atleast_2d(np.asarray(sizes, dtype=np.float64))
+        n = pts.shape[0]
+        idx = np.full(n, -1, dtype=np.intp)
+        for i, piece in enumerate(self.pieces):
+            lo = np.asarray(piece.domain.lo, dtype=np.float64)
+            hi = np.asarray(piece.domain.hi, dtype=np.float64)
+            inside = np.all((pts >= lo) & (pts <= hi), axis=1)
+            idx = np.where((idx < 0) & inside, i, idx)
+        missing = idx < 0
+        if missing.any():
+            if not extrapolate:
+                raise KeyError(f"{int(missing.sum())} points outside domain")
+            out_pts = pts[missing]
+            dist = np.empty((out_pts.shape[0], len(self.pieces)))
+            for i, piece in enumerate(self.pieces):
+                lo = np.asarray(piece.domain.lo, dtype=np.float64)
+                hi = np.asarray(piece.domain.hi, dtype=np.float64)
+                below = np.maximum(lo - out_pts, 0.0)
+                above = np.maximum(out_pts - hi, 0.0)
+                dist[:, i] = (below ** 2).sum(axis=1) + (above ** 2).sum(axis=1)
+            idx[missing] = np.argmin(dist, axis=1)
+        return idx
+
+    def estimate_batch(self, sizes: np.ndarray,
+                       *, extrapolate: bool = True) -> np.ndarray:
+        """Batched estimates for (N, d) size points: (N, len(STATS))."""
+        pts = np.atleast_2d(np.asarray(sizes, dtype=np.float64))
+        idx = self.piece_indices(pts, extrapolate=extrapolate)
+        out = np.empty((pts.shape[0], len(STATS)), dtype=np.float64)
+        for i, piece in enumerate(self.pieces):
+            rows = np.nonzero(idx == i)[0]
+            if rows.size:
+                out[rows] = piece.estimate_batch(pts[rows])
+        return out
 
 
 @dataclass
@@ -90,6 +149,26 @@ class PerformanceModel:
                 raise KeyError(f"{self.kernel}{case}: {sizes} outside domain")
             piece = cm.nearest_piece(sizes)
         return piece.estimate(sizes)
+
+    def estimate_batch(self, case: Case, sizes: np.ndarray,
+                       *, extrapolate: bool = True) -> np.ndarray:
+        """Batched estimates: (N, d) size points -> (N, len(STATS)).
+
+        Rows with any non-positive size are degenerate zero-work calls
+        (Example 4.1) and estimate to all-zero statistics, exactly like the
+        scalar :meth:`estimate` — including before the case lookup, so a
+        case whose every call is degenerate needs no model at all.
+        """
+        pts = np.atleast_2d(np.asarray(sizes, dtype=np.float64))
+        out = np.zeros((pts.shape[0], len(STATS)), dtype=np.float64)
+        live = np.all(pts > 0, axis=1)
+        if live.any():
+            cm = self.cases.get(tuple(case))
+            if cm is None:
+                raise KeyError(f"{self.kernel}: no model for case {case!r} "
+                               f"(have {list(self.cases)})")
+            out[live] = cm.estimate_batch(pts[live], extrapolate=extrapolate)
+        return out
 
     # ---------------------------------------------------------------- io --
     def to_dict(self) -> dict:
@@ -152,3 +231,7 @@ class ModelSet:
     def estimate(self, kernel: str, case: Case,
                  sizes: Sequence[int]) -> Dict[str, float]:
         return self.models[kernel].estimate(case, sizes)
+
+    def estimate_batch(self, kernel: str, case: Case,
+                       sizes: np.ndarray) -> np.ndarray:
+        return self.models[kernel].estimate_batch(case, sizes)

@@ -11,10 +11,14 @@ Taylor corrections for the mean/std of the reciprocal.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .model import ModelSet
 from .sampler import STATS, Stats
+
+_STD = STATS.index("std")
 
 
 @dataclass(frozen=True)
@@ -43,6 +47,105 @@ def predict_runtime(calls: Iterable[KernelCall], models: ModelSet) -> Stats:
     acc["std"] = var ** 0.5
     return Stats(**{"min": acc["min"], "med": acc["med"], "max": acc["max"],
                     "mean": acc["mean"], "std": acc["std"]})
+
+
+# ----------------------------------------------------------------- batched --
+
+@dataclass(frozen=True)
+class CallGroup:
+    """All calls to one (kernel, case) across a batch of call sequences."""
+
+    kernel: str
+    case: Tuple
+    sizes: np.ndarray    # (K, d) float64 size arguments, one row per call
+    config: np.ndarray   # (K,) intp — index of the originating call sequence
+
+
+@dataclass(frozen=True)
+class CompiledCalls:
+    """A batch of call sequences compiled to per-(kernel, case) matrices.
+
+    This is the "compiled" form of §4.1's deterministic call sequences: the
+    per-call Python structure is gone, and prediction reduces to one batched
+    polynomial evaluation per group plus a scatter-add back onto configs.
+    """
+
+    n_configs: int
+    groups: Tuple[CallGroup, ...]
+
+    @property
+    def n_calls(self) -> int:
+        return sum(g.sizes.shape[0] for g in self.groups)
+
+
+def compile_calls(calls_per_config: Sequence[Iterable[KernelCall]],
+                  ) -> CompiledCalls:
+    """Group a batch of call sequences into per-(kernel, case) size matrices."""
+    seqs = list(calls_per_config)
+    buckets: Dict[Tuple[str, Tuple], Tuple[list, list]] = {}
+    for i, calls in enumerate(seqs):
+        for call in calls:
+            szs, cfg = buckets.setdefault((call.kernel, call.case), ([], []))
+            szs.append(call.sizes)
+            cfg.append(i)
+    groups = tuple(
+        CallGroup(kernel=kernel, case=case,
+                  sizes=np.asarray(szs, dtype=np.float64),
+                  config=np.asarray(cfg, dtype=np.intp))
+        for (kernel, case), (szs, cfg) in buckets.items()
+    )
+    return CompiledCalls(n_configs=len(seqs), groups=groups)
+
+
+class PredictionEngine:
+    """Vectorized batched prediction over configuration sweeps (§4.5/§4.6).
+
+    Where :func:`predict_runtime` walks one call sequence through per-call
+    dict lookups and per-stat polynomial evaluations, this engine compiles a
+    whole batch of call sequences (one per candidate configuration) into
+    per-(kernel, case) size matrices and predicts every configuration with a
+    handful of stacked matrix products.  Statistics propagate exactly as in
+    Eq. 4.2/4.3: min/med/max/mean sum per config, std adds in quadrature.
+    The scalar path remains the reference oracle; both agree to ~1e-10.
+    """
+
+    def __init__(self, models: ModelSet):
+        self.models = models
+
+    def predict_compiled(self, compiled: CompiledCalls) -> np.ndarray:
+        """(n_configs, len(STATS)) runtime statistics for a compiled batch."""
+        acc = np.zeros((compiled.n_configs, len(STATS)), dtype=np.float64)
+        for g in compiled.groups:
+            est = self.models[g.kernel].estimate_batch(g.case, g.sizes)
+            for j in range(len(STATS)):
+                w = est[:, j] ** 2 if j == _STD else est[:, j]
+                acc[:, j] += np.bincount(g.config, weights=w,
+                                         minlength=compiled.n_configs)
+        acc[:, _STD] = np.sqrt(acc[:, _STD])
+        return acc
+
+    def predict_batch(self,
+                      calls_per_config: Sequence[Iterable[KernelCall]],
+                      ) -> np.ndarray:
+        """Predict runtime stats for many call sequences at once: (N, 5)."""
+        return self.predict_compiled(compile_calls(calls_per_config))
+
+    def predict_stats(self,
+                      calls_per_config: Sequence[Iterable[KernelCall]],
+                      ) -> List[Stats]:
+        return [Stats(*map(float, row))
+                for row in self.predict_batch(calls_per_config)]
+
+    def sweep(self, tracer: Callable[[int, int], List[KernelCall]], n: int,
+              candidates: Sequence[int]) -> np.ndarray:
+        """Predict one algorithm over a block-size grid: (len(candidates), 5)."""
+        return self.predict_batch([tracer(n, b) for b in candidates])
+
+    def grid(self, tracer: Callable[[int, int], List[KernelCall]],
+             ns: Sequence[int], bs: Sequence[int]) -> np.ndarray:
+        """Predict a full (n, b) grid in one shot: (len(ns), len(bs), 5)."""
+        flat = self.predict_batch([tracer(n, b) for n in ns for b in bs])
+        return flat.reshape(len(ns), len(bs), len(STATS))
 
 
 def predict_performance(runtime: Stats, cost_flops: float) -> Dict[str, float]:

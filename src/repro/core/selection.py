@@ -6,6 +6,11 @@ size n and block size b — rank them by predicted runtime, entirely without
 executing any of them.  Block-size optimization evaluates the prediction over
 a candidate grid of b and returns the argmin plus the whole profile (used to
 compute the paper's "performance yield" against empirical optima).
+
+Both entry points run on the vectorized :class:`PredictionEngine` by default
+(the batch of candidate configurations is predicted with a handful of array
+ops); pass ``batched=False`` to fall back to the scalar per-call reference
+path, which is kept as the equivalence oracle.
 """
 
 from __future__ import annotations
@@ -14,8 +19,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from .model import ModelSet
-from .predict import KernelCall, predict_runtime
-from .sampler import Stats
+from .predict import KernelCall, PredictionEngine, predict_runtime
+from .sampler import STATS, Stats
 
 Tracer = Callable[[int, int], List[KernelCall]]  # (n, b) -> call sequence
 
@@ -29,31 +34,46 @@ class RankedAlgorithm:
 
 def rank_algorithms(tracers: Mapping[str, Tracer], models: ModelSet,
                     n: int, b: int, *,
-                    stat: str = "med") -> List[RankedAlgorithm]:
+                    stat: str = "med", batched: bool = True,
+                    engine: Optional[PredictionEngine] = None,
+                    ) -> List[RankedAlgorithm]:
     """Predict every variant's runtime and sort ascending (§4.5)."""
-    ranked = [
-        RankedAlgorithm(name=name,
-                        runtime=predict_runtime(tracer(n, b), models),
-                        block_size=b)
-        for name, tracer in tracers.items()
-    ]
+    names = list(tracers)
+    if batched:
+        eng = engine or PredictionEngine(models)
+        runtimes = eng.predict_stats([tracers[name](n, b) for name in names])
+    else:
+        runtimes = [predict_runtime(tracers[name](n, b), models)
+                    for name in names]
+    ranked = [RankedAlgorithm(name=name, runtime=rt, block_size=b)
+              for name, rt in zip(names, runtimes)]
     ranked.sort(key=lambda r: getattr(r.runtime, stat))
     return ranked
 
 
 def select_algorithm(tracers: Mapping[str, Tracer], models: ModelSet,
-                     n: int, b: int, *, stat: str = "med") -> str:
-    return rank_algorithms(tracers, models, n, b, stat=stat)[0].name
+                     n: int, b: int, *, stat: str = "med",
+                     batched: bool = True) -> str:
+    return rank_algorithms(tracers, models, n, b, stat=stat,
+                           batched=batched)[0].name
 
 
 def optimize_block_size(tracer: Tracer, models: ModelSet, n: int,
                         candidates: Sequence[int], *,
-                        stat: str = "med") -> Tuple[int, Dict[int, float]]:
+                        stat: str = "med", batched: bool = True,
+                        engine: Optional[PredictionEngine] = None,
+                        ) -> Tuple[int, Dict[int, float]]:
     """b_pred = argmin_b t_pred(n, b) over the candidate grid (§4.6)."""
-    profile = {
-        b: getattr(predict_runtime(tracer(n, b), models), stat)
-        for b in candidates
-    }
+    if batched:
+        eng = engine or PredictionEngine(models)
+        col = STATS.index(stat)
+        vals = eng.sweep(tracer, n, candidates)[:, col]
+        profile = {b: float(v) for b, v in zip(candidates, vals)}
+    else:
+        profile = {
+            b: getattr(predict_runtime(tracer(n, b), models), stat)
+            for b in candidates
+        }
     b_pred = min(profile, key=profile.get)
     return b_pred, profile
 
@@ -61,12 +81,25 @@ def optimize_block_size(tracer: Tracer, models: ModelSet, n: int,
 def optimize_algorithm_and_block_size(
         tracers: Mapping[str, Tracer], models: ModelSet, n: int,
         candidates: Sequence[int], *, stat: str = "med",
+        batched: bool = True,
 ) -> Tuple[str, int, float]:
     """Joint variant + block-size selection: the paper's two goals combined."""
+    if batched:
+        # one compiled batch over the whole variants x candidates grid;
+        # np.argmin's first-minimum tie-breaking matches the scalar loop
+        eng = PredictionEngine(models)
+        names = list(tracers)
+        col = STATS.index(stat)
+        vals = eng.predict_batch([tracers[name](n, b)
+                                  for name in names for b in candidates])
+        grid = vals[:, col].reshape(len(names), len(candidates))
+        flat = int(grid.argmin())
+        vi, bi = divmod(flat, len(candidates))
+        return names[vi], candidates[bi], float(grid[vi, bi])
     best: Optional[Tuple[str, int, float]] = None
     for name, tracer in tracers.items():
         b, profile = optimize_block_size(tracer, models, n, candidates,
-                                         stat=stat)
+                                         stat=stat, batched=False)
         t = profile[b]
         if best is None or t < best[2]:
             best = (name, b, t)

@@ -1,8 +1,8 @@
 """repro.dla — dense linear algebra substrate (kernels + blocked algorithms)."""
 
 from . import blocked, kernels
-from .engine import ExecEngine, Matrix, TraceEngine, View
+from .engine import ExecEngine, Matrix, TraceEngine, View, trace_calls
 from .kernels import KERNELS, KernelDef, kernel_flops
 
 __all__ = ["blocked", "kernels", "ExecEngine", "Matrix", "TraceEngine",
-           "View", "KERNELS", "KernelDef", "kernel_flops"]
+           "View", "trace_calls", "KERNELS", "KernelDef", "kernel_flops"]

@@ -18,11 +18,11 @@ then either
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.predict import KernelCall
+from ..core.predict import CompiledCalls, KernelCall, compile_calls
 from . import kernels as K
 
 
@@ -166,6 +166,18 @@ class TraceEngine(Engine):
 
     def trsyl(self, tA, tB, sgn, A, B, C):
         self._rec("trsyl", (tA, tB, sgn), C.shape)
+
+    def compile(self) -> CompiledCalls:
+        """Compile the recorded sequence into per-(kernel, case) size
+        matrices — the form the batched :class:`PredictionEngine` consumes."""
+        return compile_calls([self.calls])
+
+
+def trace_calls(fn: Callable[["Engine"], None]) -> List[KernelCall]:
+    """Trace one blocked-algorithm execution into its kernel-call sequence."""
+    eng = TraceEngine()
+    fn(eng)
+    return eng.calls
 
 
 class ExecEngine(Engine):

@@ -12,15 +12,11 @@ from typing import Callable, Dict, List
 
 from ..core.predict import KernelCall
 from . import blocked
-from .engine import Matrix, TraceEngine
+from .engine import Matrix, TraceEngine, trace_calls
 
 Tracer = Callable[[int, int], List[KernelCall]]
 
-
-def _traced(fn: Callable) -> List[KernelCall]:
-    eng = TraceEngine()
-    fn(eng)
-    return eng.calls
+_traced = trace_calls
 
 
 def potrf_tracer(variant: int) -> Tracer:

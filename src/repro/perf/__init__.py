@@ -1,1 +1,7 @@
-"""repro.perf."""
+"""repro.perf — rooflines, analytic models, and configuration predictors."""
+
+from .predictor import (ConfigCandidate, RankedConfig, RankedTracedConfig,
+                        rank_configs, rank_traced_configs)
+
+__all__ = ["ConfigCandidate", "RankedConfig", "RankedTracedConfig",
+           "rank_configs", "rank_traced_configs"]

@@ -15,8 +15,11 @@ real hardware).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
+from ..core.model import ModelSet
+from ..core.predict import KernelCall, PredictionEngine
+from ..core.sampler import Stats
 from .roofline import RooflineTerms
 
 
@@ -50,4 +53,41 @@ def rank_configs(candidates: List[ConfigCandidate],
         terms = built if isinstance(built, RooflineTerms) else extract(built)
         ranked.append(RankedConfig(cand.name, terms, cand.note))
     ranked.sort(key=lambda r: r.predicted_s)
+    return ranked
+
+
+# --------------------------------------------------------- batched ranking --
+
+@dataclass(frozen=True)
+class RankedTracedConfig:
+    """A candidate ranked by the batched kernel-model prediction engine."""
+
+    name: str
+    runtime: Stats
+    note: str = ""
+
+    @property
+    def predicted_s(self) -> float:
+        return self.runtime.med
+
+
+def rank_traced_configs(tracers: Mapping[str, Callable[..., List[KernelCall]]],
+                        models: ModelSet,
+                        *tracer_args,
+                        stat: str = "med") -> List[RankedTracedConfig]:
+    """Rank trace-producing candidates on the batched prediction engine.
+
+    The roofline path above compiles each candidate to extract bound terms;
+    this path never compiles anything: each candidate's kernel-call trace is
+    batched through :class:`PredictionEngine`, so sweeping hundreds of
+    configurations costs a handful of array ops — the §4.5 selection applied
+    at config-sweep scale.
+    """
+    names = list(tracers)
+    engine = PredictionEngine(models)
+    runtimes = engine.predict_stats(
+        [tracers[name](*tracer_args) for name in names])
+    ranked = [RankedTracedConfig(name=name, runtime=rt)
+              for name, rt in zip(names, runtimes)]
+    ranked.sort(key=lambda r: getattr(r.runtime, stat))
     return ranked

@@ -15,6 +15,7 @@ from repro.models.prefill import prefill
 from repro.models.transformer import decode_step
 
 
+@pytest.mark.slow
 def test_cache_study_measures_both_modes():
     import functools
 
@@ -71,6 +72,7 @@ def test_moe_data_shards_reshape_equivalence():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["deepseek-7b", "gemma2-27b",
                                   "mamba2-2.7b"])
 def test_prefill_then_decode_continues(arch):

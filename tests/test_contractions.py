@@ -28,6 +28,7 @@ def test_parse_einsum_style():
     assert spec.flops({"a": 2, "b": 3, "c": 4, "i": 5}) == 2 * 2 * 3 * 4 * 5
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("expr,sizes", [
     ("abc=ai,ibc", dict(a=24, b=20, c=16, i=8)),
     ("a=iaj,ji", dict(a=16, i=8, j=12)),       # §6.3.2 vector contraction
@@ -57,6 +58,7 @@ def test_access_distance_monotonic():
     assert all(v >= 0 for v in d.values())
 
 
+@pytest.mark.slow
 def test_prediction_positive_and_scales():
     spec = ContractionSpec.parse("abc=ai,ibc")
     algs = generate_algorithms(spec)
@@ -70,6 +72,7 @@ def test_prediction_positive_and_scales():
     assert t_dot > t_gemm
 
 
+@pytest.mark.slow
 def test_ranking_prefers_fewer_larger_calls():
     spec = ContractionSpec.parse("abc=ai,ibc")
     sizes = dict(a=32, b=32, c=32, i=8)

@@ -98,6 +98,7 @@ def test_geqrf():
     np.testing.assert_allclose(Q.T @ Q, np.eye(m), atol=1e-8)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("alg", blocked.SYLVESTER_ALGORITHMS)
 def test_sylvester_algorithms(alg):
     m, n = 64, 96

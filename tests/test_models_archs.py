@@ -33,7 +33,10 @@ def test_forward_shapes_no_nan(arch):
     assert not bool(jnp.isnan(logits).any())
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.slow) if a == "jamba-v0.1-52b" else a
+    for a in ARCHS
+])
 def test_train_step(arch):
     cfg = reduced(get_config(arch))
     params = init_params(cfg, KEY, dtype=jnp.float32)
@@ -51,6 +54,7 @@ def test_train_step(arch):
     assert not np.allclose(np.asarray(l0), np.asarray(l1))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [a for a in ARCHS
                                   if get_config(a).causal])
 def test_decode_matches_forward(arch):

@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on system invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis is a dev extra; install with [dev]")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.contractions import (ContractionSpec, execute,

@@ -4,6 +4,9 @@ algorithm selection, exercised on real timed JAX kernels (small sizes)."""
 import numpy as np
 import pytest
 
+# real model generation = measured kernel timings: nightly lane only
+pytestmark = pytest.mark.slow
+
 from repro.core import (GeneratorConfig, KernelBenchmark, ModelSet,
                         generate_model, predict_runtime, rank_algorithms)
 from repro.core.grids import Domain
