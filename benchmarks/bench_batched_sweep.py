@@ -4,9 +4,14 @@ The paper's promise is *instantaneous* model-based selection (§4.5/§4.6).
 This suite times a block-size sweep and a multi-variant ranking on the scalar
 per-call reference path vs the vectorized :class:`PredictionEngine`, checks
 that both select the same configuration with statistics agreeing to ~1e-10,
-and reports the sweep speedup.  The models are analytic (measurement-free,
-``common.synthetic_model_set``), so the suite runs identically on any
-machine — it is also the CI smoke lane's perf-trajectory probe.
+and reports the sweep speedup.  It also pits the engine's backends against
+each other on a fixed 64-candidate sweep: the plain NumPy batched path
+(re-traced every call, as in PR 1) vs the jitted + trace-cached path
+(``backend="jax"`` with the whole candidate set compiled once) — the
+``sweep64_*`` metrics CI tracks across commits.  The models are analytic
+(measurement-free, ``common.synthetic_model_set``), so the suite runs
+identically on any machine — it is also the CI smoke lane's
+perf-trajectory probe.
 """
 
 from __future__ import annotations
@@ -83,6 +88,31 @@ def run(report: List[str],
         f"speedup={t_rank_scalar / t_rank_batched:6.1f}x "
         f"order {'==' if order_agree else '!='} winner={ranked_batched[0].name}")
 
+    # ---- backends on the fixed 64-candidate sweep (the CI metric) ----
+    # the PR-1 baseline: numpy batched, re-tracing the candidates per call
+    cand64 = [8 * (i + 1) for i in range(64)]
+    t_np64 = _best_of(lambda: PredictionEngine(ms).sweep(
+        tracer, n, cand64), max(reps, 3))
+    # jitted + trace-cached: candidate set compiled once, stacked
+    # polynomials evaluated as jitted XLA programs
+    eng_jax = PredictionEngine(ms, backend="jax")
+    sweep_jax = eng_jax.sweep(tracer, n, cand64)        # jit + trace warmup
+    t_jax64 = _best_of(lambda: eng_jax.sweep(tracer, n, cand64),
+                       max(reps, 3))
+    # numpy + trace-cached isolates the cache's share of the win
+    eng_np = PredictionEngine(ms)
+    sweep_np = eng_np.sweep(tracer, n, cand64)
+    t_npc64 = _best_of(lambda: eng_np.sweep(tracer, n, cand64),
+                       max(reps, 3))
+    max_rel_backend = float(np.max(
+        np.abs(sweep_jax - sweep_np) / np.maximum(np.abs(sweep_np), 1e-300)))
+    report.append(
+        f"64-candidate sweep n={n}: numpy={t_np64 * 1e3:6.2f}ms "
+        f"numpy+cache={t_npc64 * 1e3:6.2f}ms "
+        f"jax+cache={t_jax64 * 1e3:6.2f}ms "
+        f"speedup={t_np64 / t_jax64:6.1f}x "
+        f"max_rel_backend_diff={max_rel_backend:.1e}")
+
     # ---- full (n, b) grid in one shot ----
     engine = PredictionEngine(ms)
     ns = [128, 192, 256] if smoke else [256, 512, 768, 1024]
@@ -108,6 +138,11 @@ def run(report: List[str],
             "rank_scalar_s": t_rank_scalar,
             "rank_batched_s": t_rank_batched,
             "rank_order_agree": bool(order_agree),
+            "sweep64_numpy_s": t_np64,
+            "sweep64_numpy_cached_s": t_npc64,
+            "sweep64_jax_cached_s": t_jax64,
+            "sweep64_speedup": t_np64 / t_jax64,
+            "max_rel_backend_diff": max_rel_backend,
             "grid_configs": len(ns) * n_cand, "grid_s": t_grid,
         })
 

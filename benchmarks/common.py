@@ -151,6 +151,20 @@ def synthetic_model_set(specs=DEFAULT_SPECS,
     return ms
 
 
+def catalog_synthetic_model_set(n: int = 264, b: int = 56) -> ModelSet:
+    """Synthetic models covering every (kernel, case) the full tracer catalog
+    (``repro.dla.tracers.ALL_TRACERS``) emits — the model set the backend
+    equivalence tests sweep the whole catalog against."""
+    from repro.dla.tracers import required_kernel_cases
+
+    dims: Dict[str, int] = {}
+    need = required_kernel_cases(n=n, b=b, dims=dims)
+    specs = [(kernel, tuple(sorted(cases, key=repr)),
+              (16,) * dims[kernel], (304,) * dims[kernel])
+             for kernel, cases in sorted(need.items())]
+    return synthetic_model_set(specs)
+
+
 def spd(n: int, seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
     a = rng.standard_normal((n, n))

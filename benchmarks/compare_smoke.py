@@ -1,0 +1,82 @@
+"""Compare two ``BENCH_smoke.json`` artifacts and warn on perf regressions.
+
+Usage::
+
+    python -m benchmarks.compare_smoke PREVIOUS.json CURRENT.json \
+        [--threshold 1.5]
+
+CI downloads the previous run's smoke artifact and calls this after the
+current one is written.  A tracked metric that grew by more than
+``threshold`` x emits a GitHub Actions ``::warning::`` annotation (the job
+still passes — smoke timings on shared runners are noisy, so regressions
+are flagged for a human, not hard-failed).  Unreadable artifacts are also
+only warned about; the exit code is always 0.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+#: (suite, metric) pairs tracked across commits; lower is better for all
+TRACKED = (
+    ("batched_sweep", "sweep64_jax_cached_s"),
+    ("batched_sweep", "sweep64_numpy_s"),
+    ("batched_sweep", "sweep_batched_s"),
+    ("batched_sweep", "grid_s"),
+)
+
+
+def _metric(artifact: dict, suite: str, name: str):
+    value = artifact.get("suites", {}).get(suite, {}).get("metrics",
+                                                          {}).get(name)
+    return float(value) if isinstance(value, (int, float)) else None
+
+
+def compare(prev: dict, curr: dict, threshold: float) -> int:
+    """Print a comparison table; return the number of flagged regressions."""
+    flagged = 0
+    for suite, name in TRACKED:
+        old, new = _metric(prev, suite, name), _metric(curr, suite, name)
+        if old is None or new is None or old <= 0:
+            print(f"  {suite}.{name}: not comparable "
+                  f"(old={old!r} new={new!r})")
+            continue
+        ratio = new / old
+        line = (f"  {suite}.{name}: {old * 1e3:.2f}ms -> {new * 1e3:.2f}ms "
+                f"({ratio:.2f}x)")
+        if ratio > threshold:
+            flagged += 1
+            print(f"::warning title=smoke perf regression::{suite}.{name} "
+                  f"slowed {ratio:.2f}x ({old * 1e3:.2f}ms -> "
+                  f"{new * 1e3:.2f}ms, threshold {threshold}x)")
+        print(line)
+    return flagged
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("previous", help="previous BENCH_smoke.json")
+    ap.add_argument("current", help="current BENCH_smoke.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="warn when metric grows by more than this factor")
+    args = ap.parse_args()
+    try:
+        with open(args.previous) as f:
+            prev = json.load(f)
+        with open(args.current) as f:
+            curr = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        # warn-only contract: a truncated/missing artifact (e.g. a previous
+        # run killed mid-write) must not fail the lane for unrelated commits
+        print(f"::warning title=smoke comparison skipped::"
+              f"cannot read artifacts: {e}")
+        return
+    print(f"smoke comparison (warn beyond {args.threshold}x):")
+    flagged = compare(prev, curr, args.threshold)
+    print(f"{flagged} regression(s) flagged" if flagged
+          else "no regressions flagged")
+
+
+if __name__ == "__main__":
+    main()

@@ -60,11 +60,15 @@ def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:
         print("\n".join(report))
     except Exception:
         ok = False
-        traceback.print_exc()
+        tb = traceback.format_exc()
+        print(tb, flush=True)
     seconds = time.perf_counter() - t0
     print(f"[{name}: {seconds:.1f}s]", flush=True)
-    return {"ok": ok, "seconds": seconds, "report": report,
-            "metrics": metrics}
+    result = {"ok": ok, "seconds": seconds, "report": report,
+              "metrics": metrics}
+    if not ok:
+        result["traceback"] = tb   # carried into the CI smoke artifact
+    return result
 
 
 def main() -> None:

@@ -13,8 +13,8 @@ from .grids import Domain, grid_points
 from .model import CaseModel, ModelSet, PerformanceModel, Piece
 from .modelgen import (GenerationReport, KernelBenchmark, generate_model,
                        generate_model_set)
-from .predict import (CompiledCalls, KernelCall, PredictionEngine,
-                      absolute_relative_error, compile_calls,
+from .predict import (BACKENDS, CompiledCalls, KernelCall, PredictionEngine,
+                      TraceCache, absolute_relative_error, compile_calls,
                       predict_efficiency, predict_performance,
                       predict_runtime, relative_error)
 from .refinement import GeneratorConfig, refine, stats_sample_fn
@@ -28,8 +28,8 @@ __all__ = [
     "monomial_basis", "relative_errors", "stack_polynomials", "Domain",
     "grid_points", "CaseModel", "ModelSet",
     "PerformanceModel", "Piece", "GenerationReport", "KernelBenchmark",
-    "generate_model", "generate_model_set", "CompiledCalls", "KernelCall",
-    "PredictionEngine", "compile_calls",
+    "generate_model", "generate_model_set", "BACKENDS", "CompiledCalls",
+    "KernelCall", "PredictionEngine", "TraceCache", "compile_calls",
     "absolute_relative_error", "predict_efficiency", "predict_performance",
     "predict_runtime", "relative_error", "GeneratorConfig", "refine",
     "stats_sample_fn", "STATS", "Stats", "measure_calls", "measure_single",

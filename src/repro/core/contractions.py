@@ -60,7 +60,25 @@ class ContractionSpec:
 
     @property
     def contracted(self) -> Tuple[str, ...]:
-        return tuple(i for i in self.a_idx if i in self.b_idx)
+        """Indices summed over: shared by A and B but absent from C.
+
+        An index shared by A and B that *also* appears in the output is a
+        batch index (e.g. ``b`` in ``bij,bjk->bik``), not a contraction —
+        treating it as contracted would let the generator build kernels that
+        sum over it.
+        """
+        return tuple(i for i in self.a_idx
+                     if i in self.b_idx and i not in self.out_idx)
+
+    @property
+    def batch(self) -> Tuple[str, ...]:
+        """Indices shared by A, B and C (batch dimensions).
+
+        The §6.1 kernels are plain BLAS calls without batching, so batch
+        indices can only ever be loop indices.
+        """
+        return tuple(i for i in self.a_idx
+                     if i in self.b_idx and i in self.out_idx)
 
     @property
     def all_indices(self) -> Tuple[str, ...]:
@@ -136,8 +154,11 @@ def generate_algorithms(spec: ContractionSpec,
     emit one algorithm per loop-order permutation.
     """
     contracted = set(spec.contracted)
-    free_a = [i for i in spec.a_idx if i not in contracted]
-    free_b = [i for i in spec.b_idx if i not in contracted]
+    batch = set(spec.batch)
+    # batch indices are neither free nor contracted: the BLAS-style kernel
+    # patterns cannot absorb them, so they may only become loop indices
+    free_a = [i for i in spec.a_idx if i not in contracted and i not in batch]
+    free_b = [i for i in spec.b_idx if i not in contracted and i not in batch]
     algs: List[ContractionAlgorithm] = []
     seen = set()
     for kernel, (nfa, nfb, nc) in _KERNEL_PATTERNS.items():
@@ -208,12 +229,15 @@ def access_distance(alg: ContractionAlgorithm,
                     sizes: Mapping[str, int]) -> Dict[str, float]:
     """Bytes touched between consecutive uses of the same slice (§6.2.3).
 
-    For each operand, find the innermost loop index NOT indexing it; the
-    slice is reused after the loops inside that one complete — the data
-    touched in between is the access distance.  Operands indexed by the
-    innermost loop change every iteration (distance = one call's working
-    set); operands not indexed by any loop are touched every iteration
-    (distance 0 → always warm after the first iteration).
+    For each operand, count the iterations of the innermost loops that do
+    NOT index it: the same slice is reused once those loops cycle, and the
+    data touched in between — that many calls' working sets — is the access
+    distance.  Operands indexed by the innermost loop change slice every
+    iteration, and operands not indexed by any loop are touched on *every*
+    iteration; in both cases one call's working set separates consecutive
+    uses (distance = ``call_bytes``, §6.2.3 — never 0: even an
+    always-touched operand is evicted between uses if a single call's
+    operands overflow the cache).
     """
     spec = alg.spec
     a_sh, b_sh, o_sh = alg.kernel_shapes(sizes)
@@ -222,9 +246,8 @@ def access_distance(alg: ContractionAlgorithm,
     out = {}
     for name, idx in (("A", spec.a_idx), ("B", spec.b_idx),
                       ("C", spec.out_idx)):
-        dist = 0.0
         # walk loops inner -> outer; accumulate iteration space not touching
-        # this operand
+        # this operand, up to the innermost loop that does index it
         reuse_span = 1
         indexed = False
         for loop in reversed(alg.loop_order):
@@ -232,14 +255,9 @@ def access_distance(alg: ContractionAlgorithm,
                 indexed = True
                 break
             reuse_span *= sizes[loop]
-        if not alg.loop_order:
-            dist = 0.0
-        elif not indexed:
-            # operand constant across ALL loops: reused every iteration
-            dist = call_bytes
-        else:
-            dist = call_bytes * reuse_span
-        out[name] = dist
+        # not indexed by any loop (including loop-less algorithms): the
+        # operand is touched on every call, one working set apart
+        out[name] = call_bytes * (reuse_span if indexed else 1)
     return out
 
 

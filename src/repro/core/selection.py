@@ -10,19 +10,21 @@ compute the paper's "performance yield" against empirical optima).
 Both entry points run on the vectorized :class:`PredictionEngine` by default
 (the batch of candidate configurations is predicted with a handful of array
 ops); pass ``batched=False`` to fall back to the scalar per-call reference
-path, which is kept as the equivalence oracle.
+path, which is kept as the equivalence oracle.  ``backend="jax"`` evaluates
+the stacked polynomials in jitted XLA programs, and passing a shared
+``engine=`` lets repeated selections reuse its trace cache (traced call
+sequences and compiled sweep batches) instead of re-tracing.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .model import ModelSet
-from .predict import KernelCall, PredictionEngine, predict_runtime
+from .predict import (PredictionEngine, Tracer, predict_runtime,
+                      resolve_engine)
 from .sampler import STATS, Stats
-
-Tracer = Callable[[int, int], List[KernelCall]]  # (n, b) -> call sequence
 
 
 @dataclass(frozen=True)
@@ -32,16 +34,25 @@ class RankedAlgorithm:
     block_size: int
 
 
+def _check_scalar_path(batched, backend, engine):
+    if not batched and (backend is not None or engine is not None):
+        raise ValueError("backend=/engine= apply to the batched engine; "
+                         "the scalar oracle (batched=False) has neither")
+
+
 def rank_algorithms(tracers: Mapping[str, Tracer], models: ModelSet,
                     n: int, b: int, *,
                     stat: str = "med", batched: bool = True,
+                    backend: Optional[str] = None,
                     engine: Optional[PredictionEngine] = None,
                     ) -> List[RankedAlgorithm]:
     """Predict every variant's runtime and sort ascending (§4.5)."""
+    _check_scalar_path(batched, backend, engine)
     names = list(tracers)
     if batched:
-        eng = engine or PredictionEngine(models)
-        runtimes = eng.predict_stats([tracers[name](n, b) for name in names])
+        eng = resolve_engine(models, backend, engine)
+        runtimes = eng.predict_stats([eng.cache.calls(tracers[name], n, b)
+                                      for name in names])
     else:
         runtimes = [predict_runtime(tracers[name](n, b), models)
                     for name in names]
@@ -53,19 +64,22 @@ def rank_algorithms(tracers: Mapping[str, Tracer], models: ModelSet,
 
 def select_algorithm(tracers: Mapping[str, Tracer], models: ModelSet,
                      n: int, b: int, *, stat: str = "med",
-                     batched: bool = True) -> str:
-    return rank_algorithms(tracers, models, n, b, stat=stat,
-                           batched=batched)[0].name
+                     batched: bool = True, backend: Optional[str] = None,
+                     engine: Optional[PredictionEngine] = None) -> str:
+    return rank_algorithms(tracers, models, n, b, stat=stat, batched=batched,
+                           backend=backend, engine=engine)[0].name
 
 
 def optimize_block_size(tracer: Tracer, models: ModelSet, n: int,
                         candidates: Sequence[int], *,
                         stat: str = "med", batched: bool = True,
+                        backend: Optional[str] = None,
                         engine: Optional[PredictionEngine] = None,
                         ) -> Tuple[int, Dict[int, float]]:
     """b_pred = argmin_b t_pred(n, b) over the candidate grid (§4.6)."""
+    _check_scalar_path(batched, backend, engine)
     if batched:
-        eng = engine or PredictionEngine(models)
+        eng = resolve_engine(models, backend, engine)
         col = STATS.index(stat)
         vals = eng.sweep(tracer, n, candidates)[:, col]
         profile = {b: float(v) for b, v in zip(candidates, vals)}
@@ -81,16 +95,18 @@ def optimize_block_size(tracer: Tracer, models: ModelSet, n: int,
 def optimize_algorithm_and_block_size(
         tracers: Mapping[str, Tracer], models: ModelSet, n: int,
         candidates: Sequence[int], *, stat: str = "med",
-        batched: bool = True,
+        batched: bool = True, backend: Optional[str] = None,
+        engine: Optional[PredictionEngine] = None,
 ) -> Tuple[str, int, float]:
     """Joint variant + block-size selection: the paper's two goals combined."""
+    _check_scalar_path(batched, backend, engine)
     if batched:
         # one compiled batch over the whole variants x candidates grid;
         # np.argmin's first-minimum tie-breaking matches the scalar loop
-        eng = PredictionEngine(models)
+        eng = resolve_engine(models, backend, engine)
         names = list(tracers)
         col = STATS.index(stat)
-        vals = eng.predict_batch([tracers[name](n, b)
+        vals = eng.predict_batch([eng.cache.calls(tracers[name], n, b)
                                   for name in names for b in candidates])
         grid = vals[:, col].reshape(len(names), len(candidates))
         flat = int(grid.argmin())

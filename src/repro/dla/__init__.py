@@ -1,8 +1,10 @@
 """repro.dla — dense linear algebra substrate (kernels + blocked algorithms)."""
 
 from . import blocked, kernels
-from .engine import ExecEngine, Matrix, TraceEngine, View, trace_calls
+from .engine import (ExecEngine, Matrix, TraceEngine, View, compile_traces,
+                     trace_calls)
 from .kernels import KERNELS, KernelDef, kernel_flops
 
 __all__ = ["blocked", "kernels", "ExecEngine", "Matrix", "TraceEngine",
-           "View", "trace_calls", "KERNELS", "KernelDef", "kernel_flops"]
+           "View", "compile_traces", "trace_calls", "KERNELS", "KernelDef",
+           "kernel_flops"]

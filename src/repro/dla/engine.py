@@ -18,7 +18,7 @@ then either
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -178,6 +178,14 @@ def trace_calls(fn: Callable[["Engine"], None]) -> List[KernelCall]:
     eng = TraceEngine()
     fn(eng)
     return eng.calls
+
+
+def compile_traces(fns: Sequence[Callable[["Engine"], None]],
+                   ) -> CompiledCalls:
+    """Trace a whole batch of algorithm builders and compile them into one
+    reusable per-(kernel, case) batch — the artifact
+    :meth:`repro.core.predict.PredictionEngine.predict_compiled` consumes."""
+    return compile_calls([trace_calls(fn) for fn in fns])
 
 
 class ExecEngine(Engine):

@@ -8,13 +8,11 @@ one algorithm execution without running any kernel.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+from typing import Dict, List
 
-from ..core.predict import KernelCall
+from ..core.predict import KernelCall, Tracer
 from . import blocked
 from .engine import Matrix, TraceEngine, trace_calls
-
-Tracer = Callable[[int, int], List[KernelCall]]
 
 _traced = trace_calls
 
@@ -87,14 +85,25 @@ LAPACK_TRACERS: Dict[str, Tracer] = {
     "geqrf": geqrf_tracer(),
 }
 
+#: the full catalog, one flat name -> tracer map (LAPACK aliases shadow the
+#: identically-named variant entries they point at)
+ALL_TRACERS: Dict[str, Tracer] = {**CHOLESKY_TRACERS, **TRTRI_TRACERS,
+                                  **SYLVESTER_TRACERS, **LAPACK_TRACERS}
 
-def required_kernel_cases(tracers=None, n: int = 264, b: int = 56) -> dict:
+
+def required_kernel_cases(tracers=None, n: int = 264, b: int = 56,
+                          dims: Dict[str, int] = None) -> dict:
     """All (kernel, case) pairs any catalog algorithm emits — used to decide
-    which sub-models to generate (§3.2.1: 'only a limited set')."""
-    cats = tracers or {**CHOLESKY_TRACERS, **TRTRI_TRACERS,
-                       **SYLVESTER_TRACERS, **LAPACK_TRACERS}
+    which sub-models to generate (§3.2.1: 'only a limited set').
+
+    Pass a dict as ``dims`` to also collect each kernel's size-argument
+    count (the model-domain rank), e.g. for building synthetic model sets.
+    """
+    cats = tracers or ALL_TRACERS
     need: Dict[str, set] = {}
     for tracer in cats.values():
         for call in tracer(n, b):
             need.setdefault(call.kernel, set()).add(call.case)
+            if dims is not None:
+                dims[call.kernel] = len(call.sizes)
     return need

@@ -18,7 +18,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from ..core.model import ModelSet
-from ..core.predict import KernelCall, PredictionEngine
+from ..core.predict import (KernelCall, PredictionEngine,
+                            resolve_engine)
 from ..core.sampler import Stats
 from .roofline import RooflineTerms
 
@@ -65,29 +66,37 @@ class RankedTracedConfig:
     name: str
     runtime: Stats
     note: str = ""
+    stat: str = "med"    # the statistic the ranking sorted by
 
     @property
     def predicted_s(self) -> float:
-        return self.runtime.med
+        return getattr(self.runtime, self.stat)
 
 
 def rank_traced_configs(tracers: Mapping[str, Callable[..., List[KernelCall]]],
                         models: ModelSet,
                         *tracer_args,
-                        stat: str = "med") -> List[RankedTracedConfig]:
+                        stat: str = "med",
+                        backend: Optional[str] = None,
+                        engine: Optional[PredictionEngine] = None,
+                        ) -> List[RankedTracedConfig]:
     """Rank trace-producing candidates on the batched prediction engine.
 
     The roofline path above compiles each candidate to extract bound terms;
     this path never compiles anything: each candidate's kernel-call trace is
     batched through :class:`PredictionEngine`, so sweeping hundreds of
     configurations costs a handful of array ops — the §4.5 selection applied
-    at config-sweep scale.
+    at config-sweep scale.  ``backend="jax"`` evaluates the models in jitted
+    XLA programs; ``engine=`` exists for symmetry with the core selection
+    entry points (jit caches are process-wide, and these tracers take
+    arbitrary ``*tracer_args``, so the per-(n, b) trace cache does not
+    apply — a shared engine buys consistency checks, not reuse).
     """
     names = list(tracers)
-    engine = PredictionEngine(models)
+    engine = resolve_engine(models, backend, engine)
     runtimes = engine.predict_stats(
         [tracers[name](*tracer_args) for name in names])
-    ranked = [RankedTracedConfig(name=name, runtime=rt)
+    ranked = [RankedTracedConfig(name=name, runtime=rt, stat=stat)
               for name, rt in zip(names, runtimes)]
-    ranked.sort(key=lambda r: getattr(r.runtime, stat))
+    ranked.sort(key=lambda r: r.predicted_s)
     return ranked

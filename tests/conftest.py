@@ -1,0 +1,15 @@
+"""Make the repo root importable so tests can reach ``benchmarks.*``.
+
+``pip install -e .`` only installs the ``src/`` packages; the benchmarks
+package (synthetic model sets, smoke utilities) lives at the repo root and
+is only on ``sys.path`` when pytest is launched as ``python -m pytest``
+from the checkout.  Insert the root explicitly so a bare ``pytest`` run
+collects cleanly too.
+"""
+
+import sys
+from pathlib import Path
+
+_ROOT = str(Path(__file__).resolve().parents[1])
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)

@@ -3,9 +3,9 @@
 import numpy as np
 import pytest
 
-from repro.core.contractions import (ContractionSpec, access_distance,
-                                     execute, execute_reference,
-                                     generate_algorithms,
+from repro.core.contractions import (ContractionAlgorithm, ContractionSpec,
+                                     access_distance, execute,
+                                     execute_reference, generate_algorithms,
                                      predict_contraction,
                                      rank_contraction_algorithms)
 
@@ -47,6 +47,82 @@ def test_all_algorithms_correct(expr, sizes):
     for alg in algs[::3]:              # stride for speed; all kernels hit
         got = execute(alg, A, B, sizes)
         np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_batch_index_classification():
+    # an index shared by A, B and C is a batch dimension, not a contraction
+    spec = ContractionSpec.parse("bij,bjk->bik")
+    assert spec.contracted == ("j",)
+    assert spec.batch == ("b",)
+    assert spec.all_indices == ("b", "i", "j", "k")
+    # no batch index: nothing changes
+    assert ContractionSpec.parse("ai,ibc->abc").batch == ()
+
+
+def test_batched_spec_algorithms_match_reference():
+    """Regression: `b` in bij,bjk->bik was misclassified as contracted, so
+    the generator could hand batch dimensions to the kernel patterns.  Batch
+    indices must only ever be loop indices, and every generated algorithm
+    must reproduce the einsum reference."""
+    spec = ContractionSpec.parse("bij,bjk->bik")
+    algs = generate_algorithms(spec)
+    assert algs
+    for alg in algs:
+        assert "b" not in alg.kernel_dims, alg.name
+        assert "b" in alg.loop_order, alg.name
+    sizes = dict(b=3, i=4, j=5, k=6)
+    A = RNG.standard_normal([sizes[i] for i in spec.a_idx]).astype(np.float32)
+    B = RNG.standard_normal([sizes[i] for i in spec.b_idx]).astype(np.float32)
+    ref = execute_reference(spec, A, B)
+    for alg in algs:
+        got = execute(alg, A, B, sizes)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4,
+                                   err_msg=alg.name)
+
+
+def test_access_distance_known_loop_nest():
+    """Pin §6.2.3 access distances for hand-built loop nests (4-byte items).
+
+    ``C[ab] = A[ai] * B[ib]`` with a dot kernel over ``i``: one call touches
+    the two length-i fibers plus the scalar output — 4*(i + i + 1) bytes.
+    """
+    spec = ContractionSpec.parse("ab=ai,ib")
+    sizes = dict(a=10, b=7, i=4)
+    dot = ContractionAlgorithm(spec, "dot", ("i",), ("a", "b"))
+    call_bytes = 4 * (4 + 4 + 1)
+    d = access_distance(dot, sizes)
+    # A[a,:] is reused only after the whole inner b-loop cycles
+    assert d["A"] == call_bytes * sizes["b"]
+    # B and C are indexed by the innermost loop: one working set apart
+    assert d["B"] == call_bytes
+    assert d["C"] == call_bytes
+    # axpy over the a-fiber, loops (b, i): C[:, b] is constant across the
+    # inner i-loop, so its reuse distance spans the i iterations
+    axpy = ContractionAlgorithm(spec, "axpy_a", ("a",), ("b", "i"))
+    call_bytes = 4 * (10 + 1 + 10)
+    d = access_distance(axpy, sizes)
+    assert d["A"] == call_bytes
+    assert d["B"] == call_bytes
+    assert d["C"] == call_bytes * sizes["i"]
+
+
+def test_access_distance_loopless_and_untouched_operands():
+    # no loops at all: a single gemm call computes everything; every operand
+    # is one working set away (paper-correct: never distance 0 — a call
+    # whose working set overflows the cache leaves nothing warm)
+    spec = ContractionSpec.parse("ab=ai,ib")
+    sizes = dict(a=10, b=7, i=4)
+    gemm = ContractionAlgorithm(spec, "gemm", ("a", "b", "i"), ())
+    call_bytes = 4 * (10 * 4 + 4 * 7 + 10 * 7)
+    assert access_distance(gemm, sizes) == {
+        "A": call_bytes, "B": call_bytes, "C": call_bytes}
+    # operand not indexed by ANY loop (A below): touched every iteration,
+    # one call's working set between consecutive uses — not 0
+    spec2 = ContractionSpec.parse("abc=ai,ibc")
+    sizes2 = dict(a=24, b=20, c=16, i=8)
+    alg = ContractionAlgorithm(spec2, "gemm", ("a", "b", "i"), ("c",))
+    call_bytes2 = 4 * (24 * 8 + 8 * 20 + 24 * 20)
+    assert access_distance(alg, sizes2)["A"] == call_bytes2
 
 
 def test_access_distance_monotonic():

@@ -1,13 +1,16 @@
 """Unit tests: model structure, prediction statistics, selection (§4.1/4.5)."""
 
+import math
+
 import numpy as np
 import pytest
 
 from repro.core import (Domain, KernelCall, ModelSet, PerformanceModel,
-                        Piece, Stats, fit_relative, monomial_basis,
-                        optimize_block_size, performance_yield,
-                        predict_efficiency, predict_performance,
-                        predict_runtime, rank_algorithms)
+                        Piece, Stats, absolute_relative_error, fit_relative,
+                        monomial_basis, optimize_block_size,
+                        performance_yield, predict_efficiency,
+                        predict_performance, predict_runtime, rank_algorithms,
+                        relative_error)
 
 
 def _make_model(kernel="k", coef=1e-9, const=1e-6):
@@ -75,6 +78,15 @@ def test_ranking_and_block_size():
     measured = {b: profile[b] * 1.02 for b in profile}  # consistent meas.
     b_opt, yld = performance_yield(measured, b_pred)
     assert yld == pytest.approx(1.0)
+
+
+def test_relative_error_zero_measurement_is_nan():
+    # degenerate/empty measurements must not crash error sweeps (§4.2)
+    assert math.isnan(relative_error(1.0, 0.0))
+    assert math.isnan(relative_error(0.0, 0.0))
+    assert math.isnan(absolute_relative_error(1.0, 0.0))
+    assert relative_error(2.0, 1.0) == pytest.approx(1.0)
+    assert absolute_relative_error(0.5, 1.0) == pytest.approx(0.5)
 
 
 def test_model_set_missing_case():

@@ -1,0 +1,156 @@
+"""Equivalence-oracle tests for the JAX prediction backend + trace cache.
+
+The scalar per-call path (`predict_runtime`) is the reference oracle; both
+batched backends — ``backend="numpy"`` and the jitted ``backend="jax"``
+(padded per-(kernel, case) tensors, float64 XLA programs) — must agree with
+it to ~1e-8 across the full tracer catalog.  A cached ``sweep`` must return
+bit-identical results to an uncached one.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks.common import catalog_synthetic_model_set
+from repro.core import (PredictionEngine, TraceCache, fit_relative,
+                        monomial_basis, predict_runtime, stack_polynomials)
+from repro.core.sampler import STATS
+from repro.dla.tracers import ALL_TRACERS, CHOLESKY_TRACERS, TRTRI_TRACERS
+
+REL = 1e-8
+
+CATALOG = ALL_TRACERS
+
+
+def _rel_close(a, b, tol=REL):
+    return abs(a - b) <= tol * max(1.0, abs(a), abs(b))
+
+
+@pytest.fixture(scope="module")
+def models():
+    return catalog_synthetic_model_set()
+
+
+def test_backends_match_scalar_oracle_on_full_catalog(models):
+    n, b = 264, 56
+    seqs = [tracer(n, b) for tracer in CATALOG.values()]
+    got_np = PredictionEngine(models).predict_batch(seqs)
+    got_jax = PredictionEngine(models, backend="jax").predict_batch(seqs)
+    for i, (name, tracer) in enumerate(CATALOG.items()):
+        ref = predict_runtime(tracer(n, b), models)
+        for j, s in enumerate(STATS):
+            assert _rel_close(got_np[i, j], getattr(ref, s)), (name, s)
+            assert _rel_close(got_jax[i, j], getattr(ref, s)), (name, s)
+
+
+def test_jax_estimate_batch_degenerate_and_out_of_domain(models):
+    """Degenerate rows estimate 0 and out-of-domain rows clamp, both exactly
+    like the numpy batch path."""
+    model = models["gemm"]
+    case = next(iter(model.cases))
+    pts = np.array([[0, 64, 64], [64, -8, 64], [64, 64, 64],
+                    [4, 4, 4], [5000, 5000, 5000]], dtype=np.float64)
+    ref = model.estimate_batch(case, pts)
+    got = model.estimate_batch(case, pts, backend="jax")
+    assert np.all(got[:2] == 0.0)
+    np.testing.assert_allclose(got, ref, rtol=REL, atol=0)
+
+
+def test_unknown_backend_rejected(models):
+    with pytest.raises(ValueError, match="backend"):
+        PredictionEngine(models, backend="torch")
+
+
+def test_conflicting_backend_and_engine_rejected(models):
+    """An explicit backend= must not be silently overridden by engine=."""
+    from repro.core import rank_algorithms
+
+    eng = PredictionEngine(models, backend="jax")
+    with pytest.raises(ValueError, match="conflicts"):
+        rank_algorithms(CHOLESKY_TRACERS, models, 264, 56,
+                        backend="numpy", engine=eng)
+    # the scalar oracle has no backend: an explicit one must not be dropped
+    with pytest.raises(ValueError, match="scalar"):
+        rank_algorithms(CHOLESKY_TRACERS, models, 264, 56,
+                        batched=False, backend="jax")
+    # matching or omitted backend is fine
+    ranked = rank_algorithms(CHOLESKY_TRACERS, models, 264, 56, engine=eng)
+    assert rank_algorithms(CHOLESKY_TRACERS, models, 264, 56,
+                           backend="jax", engine=eng) == ranked
+
+
+def test_stacked_polynomials_eval_jax_matches_numpy():
+    rng = np.random.default_rng(41)
+    pts = rng.uniform(8, 512, size=(40, 2))
+    vals = 1e-9 * pts[:, 0] ** 2 * pts[:, 1] + 1e-6
+    full = monomial_basis([(2, 1)])
+    polys = [fit_relative(pts, vals * f, full) for f in (0.9, 1.0, 1.1)]
+    # a constant-basis polynomial lands in a second group: exercises padding
+    polys.append(fit_relative(pts, np.full(len(pts), 3e-8), [(0, 0)]))
+    stacked = stack_polynomials(polys)
+    query = rng.uniform(4, 600, size=(25, 2))
+    np.testing.assert_allclose(stacked.eval_jax(query), stacked(query),
+                               rtol=REL, atol=0)
+
+
+def test_cached_sweep_bit_identical_to_uncached(models):
+    tracer = CHOLESKY_TRACERS["potrf3"]
+    candidates = [8 * (i + 1) for i in range(16)]
+    eng = PredictionEngine(models)
+    first = eng.sweep(tracer, 256, candidates)
+    assert (eng.cache.hits, eng.cache.misses) == (0, len(candidates))
+    again = eng.sweep(tracer, 256, candidates)
+    # the compiled batch is reused outright: zero extra traces (one
+    # whole-batch hit), and the prediction is bit-identical
+    assert eng.cache.misses == len(candidates)
+    assert eng.cache.hits == 1
+    np.testing.assert_array_equal(again, first)
+    # an uncached engine computes the same bits
+    uncached = PredictionEngine(models).sweep(tracer, 256, candidates)
+    np.testing.assert_array_equal(uncached, first)
+    # the sweep artifact itself is one object, reusable via predict_compiled
+    compiled = eng.compile_sweep(tracer, 256, candidates)
+    assert compiled is eng.compile_sweep(tracer, 256, candidates)
+    np.testing.assert_array_equal(eng.predict_compiled(compiled), first)
+
+
+def test_trace_cache_shared_across_engines_and_backends(models):
+    cache = TraceCache()
+    eng_np = PredictionEngine(models, cache=cache)
+    eng_jax = PredictionEngine(models, backend="jax", cache=cache)
+    tracer = TRTRI_TRACERS["trtri1"]
+    ns, bs = [128, 192], [16, 32, 48]
+    grid_np = eng_np.grid(tracer, ns, bs)
+    misses = cache.misses
+    grid_jax = eng_jax.grid(tracer, ns, bs)
+    assert cache.misses == misses  # second backend re-traced nothing
+    assert grid_np.shape == grid_jax.shape == (len(ns), len(bs), len(STATS))
+    np.testing.assert_allclose(grid_jax, grid_np, rtol=REL, atol=0)
+
+
+def test_selection_entry_points_agree_across_backends(models):
+    from repro.core import optimize_block_size, rank_algorithms
+
+    tracers = dict(CHOLESKY_TRACERS)
+    ranked_np = rank_algorithms(tracers, models, 264, 56)
+    ranked_jax = rank_algorithms(tracers, models, 264, 56, backend="jax")
+    assert [r.name for r in ranked_np] == [r.name for r in ranked_jax]
+    candidates = [16, 32, 48, 64]
+    b_np, prof_np = optimize_block_size(CHOLESKY_TRACERS["potrf2"], models,
+                                        264, candidates)
+    b_jax, prof_jax = optimize_block_size(CHOLESKY_TRACERS["potrf2"], models,
+                                          264, candidates, backend="jax")
+    assert b_np == b_jax
+    for b in candidates:
+        assert _rel_close(prof_np[b], prof_jax[b])
+
+
+def test_compile_traces_helper_matches_per_config_compile(models):
+    from repro.dla import Matrix, blocked, compile_traces
+
+    fns = [lambda e, b=b: blocked.potrf(e, Matrix("A", 128, 128), 128, b, 2)
+           for b in (16, 32)]
+    compiled = compile_traces(fns)
+    assert compiled.n_configs == 2
+    stats = PredictionEngine(models, backend="jax").predict_compiled(compiled)
+    assert stats.shape == (2, len(STATS))
+    assert np.all(stats[:, :4] > 0)
