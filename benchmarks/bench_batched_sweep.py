@@ -26,16 +26,8 @@ from repro.core import (PredictionEngine, optimize_block_size,
 from repro.core.sampler import STATS
 from repro.dla.tracers import CHOLESKY_TRACERS, TRTRI_TRACERS, potrf_tracer
 
+from .common import best_of as _best_of
 from .common import is_smoke, synthetic_model_set
-
-
-def _best_of(fn, repetitions: int) -> float:
-    best = float("inf")
-    for _ in range(repetitions):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def run(report: List[str],

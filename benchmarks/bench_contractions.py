@@ -1,59 +1,145 @@
-"""Benchmark: tensor-contraction micro-benchmark prediction (paper Ch. 6).
+"""Benchmark: tensor-contraction prediction on the tc subsystem (paper Ch. 6).
 
-For the paper's example contraction C_abc := A_ai B_ibc (skewed i=8) and
-the vector contraction C_a := A_iaj B_ji, predict every algorithm via
-cache-aware micro-benchmarks, execute a representative subset, and report
-winner agreement plus the prediction speedup (the paper: orders of
-magnitude faster than one execution).
+Full mode: for the paper's example contraction C_abc := A_ai B_ibc (skewed
+i=8), the vector contraction C_a := A_iaj B_ji and a batched spec
+bij,bjk->bik, rank every candidate (batched-kernel algorithms included)
+through :class:`repro.tc.ContractionPredictor`, execute a representative
+subset, and report winner agreement, micro-benchmark deduplication and the
+prediction-cost fraction (the paper: merely a fraction of a contraction's
+runtime).
+
+Smoke mode (the CI lane): the batched spec at i=j=k=64 — the ``tc_rank64_*``
+metrics CI tracks across commits: suite cost, rank time on both engine
+backends, and the suite cost as a fraction of one measured contraction
+execution (a pinned representative candidate, executed once, so the
+denominator's identity cannot drift with the ranking).
 """
 
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.contractions import (ContractionSpec, execute,
-                                     generate_algorithms,
-                                     measure_contraction,
-                                     rank_contraction_algorithms)
+                                     measure_contraction)
+from repro.tc import ContractionPredictor, is_batched_kernel
+
+from .common import best_of as _best_of
+from .common import is_smoke
 
 CASES = [
     ("abc=ai,ibc", dict(a=48, b=48, c=48, i=8)),
     ("a=iaj,ji", dict(a=48, i=24, j=24)),
+    ("bij,bjk->bik", dict(b=8, i=48, j=48, k=48)),
 ]
 
+SMOKE_SPEC = "bij,bjk->bik"
+SMOKE_SIZES = dict(b=8, i=64, j=64, k=64)
 
-def run(report: List[str]) -> None:
+
+def _operands(spec: ContractionSpec, sizes, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal([sizes[i] for i in spec.a_idx]).astype(np.float32)
+    B = rng.standard_normal([sizes[i] for i in spec.b_idx]).astype(np.float32)
+    return A, B
+
+
+def _run_full(report: List[str]) -> None:
     for expr, sizes in CASES:
         spec = ContractionSpec.parse(expr)
-        algs = generate_algorithms(spec)
         t0 = time.perf_counter()
-        ranked = rank_contraction_algorithms(spec, sizes, algorithms=algs,
-                                             repetitions=3)
+        pred = ContractionPredictor(spec, sizes, repetitions=3)
+        ranked = pred.rank()
         t_pred = time.perf_counter() - t0
+        n_batched = sum(is_batched_kernel(a.kernel) for a in pred.algorithms)
         # execute the predicted-best, the predicted-worst and two middles
-        rng = np.random.default_rng(0)
-        A = rng.standard_normal([sizes[i] for i in spec.a_idx]
-                                ).astype(np.float32)
-        B = rng.standard_normal([sizes[i] for i in spec.b_idx]
-                                ).astype(np.float32)
+        A, B = _operands(spec, sizes)
         picks = [ranked[0], ranked[len(ranked) // 3],
                  ranked[2 * len(ranked) // 3], ranked[-1]]
         t0 = time.perf_counter()
-        meas = {a.name: measure_contraction(a, A, B, sizes, 3).med
-                for a, _ in picks}
+        meas = {r.name: measure_contraction(r.algorithm, A, B, sizes, 3).med
+                for r in picks}
         t_meas = time.perf_counter() - t0
-        order_pred = [a.name for a, _ in picks]
         order_meas = sorted(meas, key=meas.get)
-        agree = order_pred[0] == order_meas[0]
+        agree = picks[0].name == order_meas[0]
         spread = meas[order_meas[-1]] / meas[order_meas[0]]
+        frac = pred.prediction_cost_fraction(meas[picks[1].name])
         report.append(
-            f"{expr:14s} algs={len(algs):3d} "
-            f"best_pred={order_pred[0][:26]:26s} "
+            f"{expr:14s} algs={len(pred.algorithms):3d} "
+            f"(batched {n_batched}) benchmarks={pred.n_benchmarks:3d} "
+            f"best_pred={picks[0].name[:26]:26s} "
             f"agree={'Y' if agree else 'N'} spread={spread:7.1f}x "
-            f"pred={t_pred:5.1f}s meas(4 algs)={t_meas:6.1f}s")
+            f"pred={t_pred:5.1f}s meas(4 algs)={t_meas:6.1f}s "
+            f"cost/exec={frac:5.2f}")
+
+
+def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
+    spec = ContractionSpec.parse(SMOKE_SPEC)
+    pred = ContractionPredictor(spec, SMOKE_SIZES, repetitions=2)
+    pred.prepare()
+    t_suite = pred.suite.cost_seconds
+    n_batched = sum(is_batched_kernel(a.kernel) for a in pred.algorithms)
+
+    ranked_np = pred.rank(backend="numpy")          # engine + compile warmup
+    t_np = _best_of(lambda: pred.rank(backend="numpy"), 3)
+    ranked_jax = pred.rank(backend="jax")
+    t_jax = _best_of(lambda: pred.rank(backend="jax"), 3)
+    backend_agree = [r.name for r in ranked_np] == [r.name for r in ranked_jax]
+
+    # the per-algorithm scalar oracle on the SAME measurements: isolates the
+    # engine-vs-scalar arithmetic, so the whole ordering must agree exactly
+    # (fresh=True would re-measure and only top-1 agreement would be noise-
+    # robust enough to track)
+    oracle = pred.rank_oracle(fresh=False)
+    oracle_agree = [r.name for r in oracle] == [r.name for r in ranked_np]
+
+    # one measured contraction execution as the cost-fraction denominator:
+    # a PINNED candidate (the dot kernel under loops b,i,k — a typical
+    # mid-field traversal), so the metric stays comparable across commits
+    # even if the ranking shifts
+    pinned = next(a for a in pred.algorithms
+                  if a.kernel == "dot" and a.loop_order == ("b", "i", "k"))
+    A, B = _operands(spec, SMOKE_SIZES)
+    t0 = time.perf_counter()
+    execute(pinned, A, B, SMOKE_SIZES)
+    t_exec = time.perf_counter() - t0
+    fraction = t_suite / t_exec
+
+    report.append(
+        f"tc_rank64 {SMOKE_SPEC} sizes={SMOKE_SIZES}: "
+        f"algs={len(pred.algorithms)} (batched {n_batched}) "
+        f"benchmarks={pred.n_benchmarks} suite={t_suite:5.2f}s")
+    report.append(
+        f"  rank: numpy={t_np * 1e3:6.2f}ms jax={t_jax * 1e3:6.2f}ms "
+        f"backends {'==' if backend_agree else '!='} "
+        f"oracle {'==' if oracle_agree else '!='} "
+        f"winner={ranked_np[0].name}")
+    report.append(
+        f"  exec pinned ({pinned.name}): {t_exec:5.2f}s -> "
+        f"suite cost fraction {fraction:5.3f} "
+        f"({'<' if fraction < 0.25 else '>='} 0.25 target)")
+    results.update({
+        "tc_rank64_algorithms": len(pred.algorithms),
+        "tc_rank64_batched_algorithms": n_batched,
+        "tc_rank64_benchmarks": pred.n_benchmarks,
+        "tc_rank64_suite_s": t_suite,
+        "tc_rank64_rank_numpy_s": t_np,
+        "tc_rank64_rank_jax_s": t_jax,
+        "tc_rank64_backend_agree": bool(backend_agree),
+        "tc_rank64_oracle_agree": bool(oracle_agree),
+        "tc_rank64_exec_s": t_exec,
+        "tc_rank64_cost_fraction": fraction,
+    })
+
+
+def run(report: List[str],
+        results: Optional[Dict[str, object]] = None) -> None:
+    if is_smoke():
+        _run_smoke(report, results if results is not None else {})
+    else:
+        _run_full(report)
 
 
 def main() -> None:

@@ -92,6 +92,17 @@ def build_model_set(specs=DEFAULT_SPECS,
     return ms, gen_s
 
 
+def best_of(fn, repetitions: int) -> float:
+    """Best-of-N wall time of ``fn()`` — the shared timing protocol behind
+    the CI-tracked smoke metrics (one copy, so the suites cannot drift)."""
+    best = float("inf")
+    for _ in range(repetitions):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def median_time(fn, repetitions: int = 5) -> float:
     if SMOKE:
         repetitions = 1

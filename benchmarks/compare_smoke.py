@@ -24,6 +24,9 @@ TRACKED = (
     ("batched_sweep", "sweep64_numpy_s"),
     ("batched_sweep", "sweep_batched_s"),
     ("batched_sweep", "grid_s"),
+    ("contractions", "tc_rank64_suite_s"),
+    ("contractions", "tc_rank64_rank_numpy_s"),
+    ("contractions", "tc_rank64_rank_jax_s"),
 )
 
 

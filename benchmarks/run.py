@@ -2,10 +2,14 @@
 
 Run with ``PYTHONPATH=src python -m benchmarks.run [--only <name>]``.
 
-``--smoke`` runs a measurement-free fast lane (tiny sizes, 1 repetition,
-synthetic models) and writes a ``BENCH_smoke.json`` artifact so CI can track
-the prediction-path performance trajectory per PR without touching real
-kernel timings.
+``--smoke`` runs the CI fast lane and writes a ``BENCH_smoke.json``
+artifact so CI can track the prediction-path performance trajectory per
+PR.  Its ``batched_sweep`` probe is measurement-free (tiny sizes, 1
+repetition, synthetic models); the ``contractions`` probe necessarily
+runs real (but tiny, deduplicated) kernel micro-benchmarks plus one
+pinned contraction execution, so its ``tc_rank64_*`` timings carry
+shared-runner noise — the cross-commit comparison only warns, never
+fails.
 """
 
 from __future__ import annotations
@@ -42,8 +46,10 @@ SUITES = {
                  "deliverable (g): per-cell roofline table"),
 }
 
-#: suites that run without any kernel measurement — the CI smoke lane
-SMOKE_SUITES = ("batched_sweep",)
+#: the CI smoke lane: the measurement-free prediction-path probe plus the
+#: (cheap, deduplicated) contraction-prediction probe with its tc_rank64_*
+#: metrics
+SMOKE_SUITES = ("batched_sweep", "contractions")
 
 
 def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:
@@ -75,8 +81,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes, 1 repetition, synthetic models; "
-                         "writes the BENCH_smoke.json artifact")
+                    help="the CI fast lane: tiny sizes, synthetic models "
+                         "(batched_sweep) + deduplicated real contraction "
+                         "micro-benchmarks (contractions); writes the "
+                         "BENCH_smoke.json artifact")
     ap.add_argument("--out", default="BENCH_smoke.json",
                     help="smoke-artifact path (with --smoke)")
     args = ap.parse_args()

@@ -21,7 +21,8 @@ from .refinement import GeneratorConfig, refine, stats_sample_fn
 from .sampler import STATS, Stats, measure_calls, measure_single
 from .selection import (RankedAlgorithm, optimize_algorithm_and_block_size,
                         optimize_block_size, performance_yield,
-                        rank_algorithms, select_algorithm)
+                        rank_algorithms, select_algorithm,
+                        select_contraction_algorithm)
 
 __all__ = [
     "Polynomial", "StackedPolynomials", "error_measure", "fit_relative",
@@ -35,5 +36,5 @@ __all__ = [
     "stats_sample_fn", "STATS", "Stats", "measure_calls", "measure_single",
     "RankedAlgorithm", "optimize_algorithm_and_block_size",
     "optimize_block_size", "performance_yield", "rank_algorithms",
-    "select_algorithm",
+    "select_algorithm", "select_contraction_algorithm",
 ]

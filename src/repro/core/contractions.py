@@ -266,25 +266,47 @@ def _make_buffers(shape, n_copies, rng):
             for _ in range(n_copies)]
 
 
-def microbenchmark(alg: ContractionAlgorithm, sizes: Mapping[str, int], *,
-                   repetitions: int = 5, cache_bytes: int = CACHE_BYTES,
-                   rng: Optional[np.random.Generator] = None,
-                   ) -> Tuple[Stats, float]:
-    """Cache-aware micro-benchmark of ONE kernel invocation (§6.2).
+def cold_pool_size(repetitions: int, call_bytes: int,
+                   cache_bytes: int = CACHE_BYTES) -> int:
+    """Buffers needed to keep a cold operand cold across the benchmark.
 
-    Returns (per-call stats, first-call overhead in seconds).  Operands whose
-    access distance exceeds the cache capacity are cycled through distinct
-    buffers between timed calls (cold); the others reuse one buffer (warm).
+    A cold operand (access distance beyond the cache) must not re-enter the
+    cache between timed calls.  Cycling through ``n`` buffers re-uses each
+    one every ``n`` calls — i.e. with ``n * call_bytes`` of kernel traffic in
+    between — so ``n`` must span the cache capacity; alternatively
+    ``repetitions + 1`` buffers (one per timed call plus the overhead call)
+    suffice outright because no buffer is ever re-used.  A fixed cap (the
+    old ``min(8, repetitions)``) silently turned cold measurements warm
+    whenever ``repetitions > 8`` and eight calls' traffic fit in cache.
+    """
+    span = math.ceil(cache_bytes / max(call_bytes, 1)) + 1
+    return max(2, min(repetitions + 1, span))
+
+
+def run_kernel_benchmark(equation: str, a_shape: Sequence[int],
+                         b_shape: Sequence[int], out_shape: Sequence[int], *,
+                         cold_a: bool, cold_b: bool, repetitions: int,
+                         cache_bytes: int = CACHE_BYTES,
+                         rng: Optional[np.random.Generator] = None,
+                         ) -> Tuple[Stats, float]:
+    """The §6.2 measurement protocol for one kernel signature.
+
+    Returns (per-call stats, first-call overhead in seconds).  Cold input
+    operands cycle through a pool of distinct buffers between timed calls —
+    sized by :func:`cold_pool_size` from the repetition count and cache
+    capacity — while warm ones reuse one buffer.  The kernel is a
+    functional jitted einsum that allocates its output, so no output-cache
+    precondition can (or need) be established.  Shared by the per-algorithm
+    :func:`microbenchmark` and the deduplicated ``repro.tc`` suite, so the
+    two paths can never desynchronize.
     """
     rng = rng or np.random.default_rng(0)
-    a_sh, b_sh, _ = alg.kernel_shapes(sizes)
-    fn = _kernel_fn(alg.kernel_equation())
-    dists = access_distance(alg, sizes)
-    n_cyc = max(2, min(8, repetitions))
-    a_bufs = _make_buffers(a_sh, n_cyc if dists["A"] > cache_bytes else 1,
-                           rng)
-    b_bufs = _make_buffers(b_sh, n_cyc if dists["B"] > cache_bytes else 1,
-                           rng)
+    fn = _kernel_fn(equation)
+    call_bytes = _ITEM * (math.prod(a_shape) + math.prod(b_shape) +
+                          math.prod(out_shape))
+    n_cyc = cold_pool_size(repetitions, call_bytes, cache_bytes)
+    a_bufs = _make_buffers(tuple(a_shape), n_cyc if cold_a else 1, rng)
+    b_bufs = _make_buffers(tuple(b_shape), n_cyc if cold_b else 1, rng)
 
     counter = [0]
 
@@ -303,28 +325,83 @@ def microbenchmark(alg: ContractionAlgorithm, sizes: Mapping[str, int], *,
     return stats, first
 
 
+def microbenchmark(alg: ContractionAlgorithm, sizes: Mapping[str, int], *,
+                   repetitions: int = 5, cache_bytes: int = CACHE_BYTES,
+                   rng: Optional[np.random.Generator] = None,
+                   ) -> Tuple[Stats, float]:
+    """Cache-aware micro-benchmark of ONE kernel invocation (§6.2).
+
+    Classifies each input operand warm/cold by its access distance versus
+    the cache capacity and delegates the measurement to
+    :func:`run_kernel_benchmark`.
+    """
+    a_sh, b_sh, o_sh = alg.kernel_shapes(sizes)
+    dists = access_distance(alg, sizes)
+    return run_kernel_benchmark(alg.kernel_equation(), a_sh, b_sh, o_sh,
+                                cold_a=dists["A"] > cache_bytes,
+                                cold_b=dists["B"] > cache_bytes,
+                                repetitions=repetitions,
+                                cache_bytes=cache_bytes, rng=rng)
+
+
 def predict_contraction(alg: ContractionAlgorithm,
                         sizes: Mapping[str, int], *,
                         repetitions: int = 5,
-                        stat: str = "med") -> float:
-    """Predicted total runtime: n_iterations x per-call estimate (§6.2)."""
+                        stat: str = "med",
+                        breakdown: bool = False):
+    """Predicted total runtime: first-call overhead + n_iterations x per-call.
+
+    The measured first-call overhead (§6.2.6: library/compile setup paid
+    once per contraction) is included once in the total; ``breakdown=True``
+    returns the components instead of the single total.
+    """
     stats, first = microbenchmark(alg, sizes, repetitions=repetitions)
     n = alg.n_iterations(sizes)
     per_call = getattr(stats, stat)
-    return per_call * n
+    total = first + per_call * n
+    if breakdown:
+        return {"total_s": total, "first_call_s": first,
+                "loop_s": per_call * n, "per_call_s": per_call,
+                "n_iterations": n}
+    return total
 
 
 def rank_contraction_algorithms(spec: ContractionSpec,
                                 sizes: Mapping[str, int], *,
                                 algorithms: Optional[Sequence[
                                     ContractionAlgorithm]] = None,
-                                repetitions: int = 5,
+                                repetitions: Optional[int] = None,
                                 stat: str = "med",
+                                batched: bool = True,
+                                backend: Optional[str] = None,
+                                suite=None,
                                 ) -> List[Tuple[ContractionAlgorithm, float]]:
-    """Predict every algorithm and sort ascending by predicted runtime."""
+    """Predict every algorithm and sort ascending by predicted runtime.
+
+    By default this runs on :class:`repro.tc.ContractionPredictor`: the
+    candidate set (including batched-kernel algorithms when ``algorithms``
+    is not given) shares one deduplicated micro-benchmark suite and is
+    predicted through the batched :class:`PredictionEngine`
+    (``backend="numpy"|"jax"``; pass ``suite=`` to share measurements
+    across rankings).  ``batched=False`` keeps the original per-algorithm
+    path — one independent micro-benchmark per candidate — as the
+    equivalence oracle.
+    """
+    if batched:
+        from ..tc import ContractionPredictor  # lazy: tc builds on this module
+        pred = ContractionPredictor(
+            spec, sizes,
+            algorithms=list(algorithms) if algorithms is not None else None,
+            repetitions=repetitions, suite=suite)
+        ranked = pred.rank(stat=stat, backend=backend or "numpy")
+        return [(r.algorithm, getattr(r.runtime, stat)) for r in ranked]
+    if backend is not None or suite is not None:
+        raise ValueError("backend=/suite= apply to the batched predictor; "
+                         "the scalar oracle (batched=False) has neither")
     algs = list(algorithms) if algorithms is not None else \
         generate_algorithms(spec)
-    ranked = [(a, predict_contraction(a, sizes, repetitions=repetitions,
+    reps = 5 if repetitions is None else repetitions
+    ranked = [(a, predict_contraction(a, sizes, repetitions=reps,
                                       stat=stat)) for a in algs]
     ranked.sort(key=lambda t: t[1])
     return ranked

@@ -14,6 +14,10 @@ path, which is kept as the equivalence oracle.  ``backend="jax"`` evaluates
 the stacked polynomials in jitted XLA programs, and passing a shared
 ``engine=`` lets repeated selections reuse its trace cache (traced call
 sequences and compiled sweep batches) instead of re-tracing.
+
+:func:`select_contraction_algorithm` extends the same selection interface
+to tensor contractions (paper Ch. 6) via :mod:`repro.tc` — micro-benchmark
+based candidate models ranked through the identical batched engine.
 """
 
 from __future__ import annotations
@@ -121,6 +125,44 @@ def optimize_algorithm_and_block_size(
             best = (name, b, t)
     assert best is not None
     return best
+
+
+# ------------------------------------------------- contractions (Ch. 6) --
+
+def select_contraction_algorithm(spec, sizes: Mapping[str, int], *,
+                                 stat: str = "med",
+                                 backend: Optional[str] = None,
+                                 repetitions: Optional[int] = None,
+                                 predictor=None) -> str:
+    """Ch. 6 counterpart of :func:`select_algorithm`: the contraction
+    algorithm (traversal x kernel, batched kernels included) with the
+    fastest predicted total runtime.
+
+    Runs on :class:`repro.tc.ContractionPredictor` — deduplicated
+    cache-aware micro-benchmarks compiled through the same batched
+    :class:`PredictionEngine` the blocked-algorithm entry points use; pass
+    ``predictor=`` to reuse its suite measurements and compiled batches
+    across calls.
+    """
+    from ..tc import ContractionPredictor  # lazy: tc builds on repro.core
+    from .contractions import ContractionSpec
+    if predictor is not None:
+        if repetitions is not None:
+            raise ValueError("repetitions= applies to a newly built "
+                             "predictor; the supplied predictor's suite "
+                             "already fixes it")
+        want = spec if isinstance(spec, ContractionSpec) else \
+            ContractionSpec.parse(spec)
+        if predictor.spec != want or predictor.sizes != dict(sizes):
+            raise ValueError(
+                f"the supplied predictor was built for "
+                f"{predictor.spec.einsum_expr()} at {predictor.sizes}, not "
+                f"{want.einsum_expr()} at {dict(sizes)}; the selection "
+                f"would silently answer the wrong contraction")
+        pred = predictor
+    else:
+        pred = ContractionPredictor(spec, sizes, repetitions=repetitions)
+    return pred.rank(stat=stat, backend=backend or "numpy")[0].name
 
 
 def performance_yield(measured_runtime: Mapping[int, float], b_pred: int,

@@ -1,0 +1,26 @@
+"""repro.tc — cache-aware tensor-contraction prediction (paper Ch. 6).
+
+Promotes the Ch. 6 scenario to a first-class subsystem on the batched
+prediction engine: a §6.1 generator extended with batched-kernel patterns
+(:mod:`~repro.tc.kernels`), a deduplicated cache-aware micro-benchmark
+suite that reports its own cost (:mod:`~repro.tc.suite`), and a
+:class:`ContractionPredictor` that compiles the whole candidate set
+through the PR-1/2 :class:`~repro.core.predict.PredictionEngine`
+(:mod:`~repro.tc.predictor`).
+"""
+
+from .kernels import (BATCH_SUFFIX, BATCHABLE_KERNELS, base_kernel,
+                      generate_algorithms, generate_batched_algorithms,
+                      is_batched_kernel, validate_algorithms)
+from .predictor import ContractionPredictor, RankedContraction
+from .suite import (COLD, WARM, MicroBenchmark, MicroBenchmarkKey,
+                    MicroBenchmarkSuite, benchmark_key)
+
+__all__ = [
+    "BATCH_SUFFIX", "BATCHABLE_KERNELS", "base_kernel",
+    "generate_algorithms", "generate_batched_algorithms",
+    "is_batched_kernel", "validate_algorithms",
+    "ContractionPredictor", "RankedContraction",
+    "COLD", "WARM", "MicroBenchmark", "MicroBenchmarkKey",
+    "MicroBenchmarkSuite", "benchmark_key",
+]

@@ -1,0 +1,235 @@
+"""Contraction prediction on the batched PredictionEngine (Ch. 6 x §4.5).
+
+The per-algorithm path (``repro.core.contractions``) micro-benchmarks every
+candidate independently and multiplies out the loop count in Python.  The
+:class:`ContractionPredictor` instead treats a contraction's candidate set
+like any other configuration sweep of the PR-1/2 engine:
+
+1. every candidate maps to a deduplicated suite micro-benchmark
+   (:mod:`repro.tc.suite`) — one measurement per distinct
+   (kernel equation, shapes, cache classes) signature;
+2. each signature becomes a (kernel, case) of a synthetic
+   :class:`PerformanceModel` whose polynomials over the single size
+   argument ``n_iterations`` encode the §6.2 prediction exactly:
+   ``t_stat(n) = first + per_call_stat * n`` for min/med/max/mean and
+   ``std(n) = per_call_std * sqrt(n)`` (Eq. 4.3 quadrature over n calls),
+   with the measured first-call overhead (§6.2.6) included once;
+3. the whole candidate set is compiled through the engine's
+   :class:`TraceCache` into one reusable :class:`CompiledCalls` batch
+   (the "block size" axis generalizes to the candidate index) and
+   predicted with ``backend="numpy"`` or ``"jax"``.
+
+``rank`` returns the traversal x kernel combinations sorted by predicted
+total runtime; ``rank_oracle`` is the un-deduplicated per-algorithm
+equivalence oracle.  With a deterministic ``measure_fn`` injected into the
+suite, both paths agree bit-for-bit on the numpy backend.
+
+Note the *cold-start* semantics of the total: ``first`` is the measured
+first-call overhead, which on this JAX substrate is dominated by XLA
+compilation (tens of ms, cached per (equation, shape) within a process).
+For realistically sized contractions the loop term dominates and the
+ranking matches warm measurements; at tiny sizes the overhead term can
+dominate and a warm re-execution (e.g. ``measure_contraction``, which
+warms up first) will order near-tied candidates differently — compare
+against ``runtime`` minus the overhead (see the per-signature ``first``
+in :attr:`ContractionPredictor.suite` results) for warm comparisons.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.contractions import ContractionAlgorithm, ContractionSpec
+from ..core.fitting import Polynomial
+from ..core.grids import Domain
+from ..core.model import ModelSet, PerformanceModel, Piece
+from ..core.predict import KernelCall, PredictionEngine, TraceCache
+from ..core.sampler import STATS, Stats
+from .kernels import generate_algorithms
+from .suite import MicroBenchmark, MicroBenchmarkKey, MicroBenchmarkSuite
+
+#: domain of the synthetic per-signature models: any positive loop count
+_N_DOMAIN = Domain((0,), (10 ** 18,))
+_SCALE = np.ones(1)
+
+
+def _signature_piece(mb: MicroBenchmark) -> Piece:
+    """The §6.2 prediction as a polynomial piece over n_iterations."""
+    linear = ((0,), (1,))          # t(n) = first + per_call * n
+    polys = {s: Polynomial(linear,
+                           np.array([mb.first, getattr(mb.stats, s)],
+                                    dtype=np.float64), _SCALE)
+             for s in ("min", "med", "max", "mean")}
+    # std of n uncorrelated calls adds in quadrature (Eq. 4.3)
+    polys["std"] = Polynomial(((0.5,),),
+                              np.array([mb.stats.std], dtype=np.float64),
+                              _SCALE)
+    return Piece(domain=_N_DOMAIN, polys=polys)
+
+
+def _total_stats(mb: MicroBenchmark, n: int) -> Stats:
+    """Scalar-path total for one algorithm: what the engine must reproduce."""
+    return Stats(min=mb.first + mb.stats.min * n,
+                 med=mb.first + mb.stats.med * n,
+                 max=mb.first + mb.stats.max * n,
+                 mean=mb.first + mb.stats.mean * n,
+                 std=mb.stats.std * n ** 0.5)
+
+
+@dataclass(frozen=True)
+class RankedContraction:
+    """One ranked traversal x kernel combination."""
+
+    algorithm: ContractionAlgorithm
+    runtime: Stats                 # predicted TOTAL runtime (incl. overhead)
+    n_iterations: int
+    benchmark: MicroBenchmarkKey   # the suite measurement backing it
+
+    @property
+    def name(self) -> str:
+        return self.algorithm.name
+
+
+class ContractionPredictor:
+    """Rank a contraction's candidate algorithms from shared micro-benchmarks.
+
+    ``prepare()`` (implicit on first use) runs the deduplicated suite and
+    builds the per-signature models; ``rank``/``predict`` then evaluate the
+    whole candidate set through one compiled engine batch per backend —
+    repeated rankings reuse the suite measurements, the shared
+    :class:`TraceCache` and the :class:`CompiledCalls` artifact, so they
+    cost a few array ops, not a single kernel execution.
+    """
+
+    def __init__(self, spec: Union[ContractionSpec, str],
+                 sizes: Mapping[str, int], *,
+                 algorithms: Optional[
+                     Sequence[ContractionAlgorithm]] = None,
+                 include_batched: bool = True,
+                 repetitions: Optional[int] = None,
+                 suite: Optional[MicroBenchmarkSuite] = None,
+                 cache: Optional[TraceCache] = None):
+        self.spec = spec if isinstance(spec, ContractionSpec) else \
+            ContractionSpec.parse(spec)
+        self.sizes = dict(sizes)
+        self.algorithms: List[ContractionAlgorithm] = (
+            list(algorithms) if algorithms is not None
+            else generate_algorithms(self.spec,
+                                     include_batched=include_batched))
+        if not self.algorithms:
+            raise ValueError(f"no candidate algorithms for "
+                             f"{self.spec.einsum_expr()}")
+        if suite is not None:
+            # the suite owns the measurement protocol; a conflicting
+            # repetition count must not be silently ignored
+            if repetitions is not None and repetitions != suite.repetitions:
+                raise ValueError(
+                    f"repetitions={repetitions} conflicts with the supplied "
+                    f"suite's repetitions={suite.repetitions}; pass one or "
+                    f"the other")
+            self.suite = suite
+        else:
+            self.suite = MicroBenchmarkSuite(
+                repetitions=5 if repetitions is None else repetitions)
+        self.cache = cache if cache is not None else TraceCache()
+        self._engines: Dict[str, PredictionEngine] = {}
+        self._models: Optional[ModelSet] = None
+        self._benchmarks: List[MicroBenchmark] = []
+        self._call_seqs: List[Tuple[KernelCall, ...]] = []
+        self._tracer = self._trace   # stable identity for the TraceCache
+
+    # ------------------------------------------------------------- suite --
+    def prepare(self) -> None:
+        """Run the (deduplicated) suite and compile the candidate models."""
+        if self._models is not None:
+            return
+        benchmarks = [self.suite.benchmark(alg, self.sizes)
+                      for alg in self.algorithms]
+        models = ModelSet()
+        seqs: List[Tuple[KernelCall, ...]] = []
+        for alg, mb in zip(self.algorithms, benchmarks):
+            if alg.kernel not in models:
+                models.add(PerformanceModel(kernel=alg.kernel,
+                                            setup="tc-microbench"))
+            model = models[alg.kernel]
+            case = (mb.key.equation, mb.key.a_shape, mb.key.b_shape,
+                    mb.key.out_shape, mb.key.classes)
+            if case not in model.cases:
+                model.add_piece(case, _signature_piece(mb))
+            seqs.append((KernelCall(kernel=alg.kernel, case=case,
+                                    sizes=(alg.n_iterations(self.sizes),)),))
+        self._models = models
+        self._benchmarks = benchmarks
+        self._call_seqs = seqs
+
+    def _trace(self, n: int, i: int) -> Tuple[KernelCall, ...]:
+        # Tracer-protocol adapter: the engine's block-size axis generalizes
+        # to the candidate index; ``n`` is unused (one fixed size mapping)
+        return self._call_seqs[i]
+
+    # ----------------------------------------------------------- predict --
+    def engine(self, backend: str = "numpy") -> PredictionEngine:
+        """The (shared-cache) engine for one backend; models built lazily."""
+        self.prepare()
+        eng = self._engines.get(backend)
+        if eng is None:
+            eng = PredictionEngine(self._models, backend=backend,
+                                   cache=self.cache)
+            self._engines[backend] = eng
+        return eng
+
+    def predict(self, backend: str = "numpy") -> np.ndarray:
+        """(n_algorithms, len(STATS)) predicted total runtimes."""
+        eng = self.engine(backend)
+        compiled = eng.compile_sweep(self._tracer, 0,
+                                     range(len(self.algorithms)))
+        return eng.predict_compiled(compiled)
+
+    def rank(self, *, stat: str = "med",
+             backend: str = "numpy") -> List[RankedContraction]:
+        """All traversal x kernel combinations, fastest-predicted first."""
+        arr = self.predict(backend)
+        col = STATS.index(stat)
+        order = np.argsort(arr[:, col], kind="stable")
+        return [RankedContraction(
+                    algorithm=self.algorithms[i],
+                    runtime=Stats(*map(float, arr[i])),
+                    n_iterations=self.algorithms[i].n_iterations(self.sizes),
+                    benchmark=self._benchmarks[i].key)
+                for i in order]
+
+    def rank_oracle(self, *, stat: str = "med",
+                    fresh: bool = True) -> List[RankedContraction]:
+        """The per-algorithm equivalence oracle: §6.2 applied in plain
+        Python per candidate — no engine, no batching.
+
+        ``fresh=True`` (default) also re-measures every candidate
+        independently (no deduplication), as the original path did;
+        ``fresh=False`` reuses the suite's shared measurements, isolating
+        the engine-vs-scalar arithmetic so the two rankings must agree
+        deterministically even with noisy real timings."""
+        out = []
+        for alg in self.algorithms:
+            mb = self.suite.benchmark_fresh(alg, self.sizes) if fresh \
+                else self.suite.benchmark(alg, self.sizes)
+            n = alg.n_iterations(self.sizes)
+            out.append(RankedContraction(algorithm=alg,
+                                         runtime=_total_stats(mb, n),
+                                         n_iterations=n, benchmark=mb.key))
+        out.sort(key=lambda r: getattr(r.runtime, stat))
+        return out
+
+    # -------------------------------------------------------------- cost --
+    @property
+    def n_benchmarks(self) -> int:
+        self.prepare()
+        return self.suite.n_benchmarks
+
+    def prediction_cost_fraction(self, measured_seconds: float) -> float:
+        """Suite cost over a measured contraction runtime (the paper's
+        "merely a fraction of a contraction's runtime" metric)."""
+        self.prepare()
+        return self.suite.cost_fraction(measured_seconds)

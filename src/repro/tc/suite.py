@@ -1,0 +1,170 @@
+"""Deduplicated cache-aware micro-benchmarks for contractions (§6.2).
+
+A contraction's candidate algorithms are highly regular: many distinct
+traversals call the *same* kernel on the *same* operand shapes under the
+*same* cache preconditions, so their micro-benchmarks are interchangeable.
+The suite exploits that: each candidate maps to a
+:class:`MicroBenchmarkKey` — (kernel equation, kernel operand shapes,
+cache class per operand) — and each distinct key is measured exactly once,
+shared across every algorithm that maps to it.
+
+The measurement itself is the shared §6.2 protocol
+(:func:`~repro.core.contractions.run_kernel_benchmark` — also backing the
+per-algorithm oracle): input operands whose access distance exceeds the
+cache capacity cycle through a pool of distinct buffers (sized by
+:func:`cold_pool_size` from the repetition count and cache capacity — no
+hard cap), warm operands reuse one buffer, and the first-call overhead
+(§6.2.6) is timed separately.  The cache classes cover the kernel's
+*input* operands: the jitted einsum allocates its output, so no
+output-cache precondition can be established, and a C-only distinction
+would merely split shareable benchmarks.  The suite accounts its own
+wall-clock cost (:attr:`~MicroBenchmarkSuite.cost_seconds`) so a
+prediction can be stated as a fraction of a measured contraction runtime
+— the paper's headline metric for Ch. 6.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..core.contractions import (CACHE_BYTES, _ITEM, ContractionAlgorithm,
+                                 access_distance, run_kernel_benchmark)
+from ..core.sampler import Stats
+
+#: cache classes an operand can be benchmarked under
+WARM, COLD = "warm", "cold"
+
+
+@dataclass(frozen=True)
+class MicroBenchmarkKey:
+    """Identity of one distinct micro-benchmark.
+
+    Two candidate algorithms with equal keys perform indistinguishable
+    kernel calls under indistinguishable cache states, so one measurement
+    serves both — the suite's deduplication signature.
+    """
+
+    equation: str                      # kernel einsum, e.g. "bij,bjk->bik"
+    a_shape: Tuple[int, ...]
+    b_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    classes: Tuple[str, str]           # cache class of the inputs A, B
+
+    @property
+    def call_bytes(self) -> int:
+        """Bytes one kernel call touches across all three operands."""
+        return _ITEM * (math.prod(self.a_shape) + math.prod(self.b_shape) +
+                        math.prod(self.out_shape))
+
+
+def benchmark_key(alg: ContractionAlgorithm, sizes: Mapping[str, int],
+                  cache_bytes: int = CACHE_BYTES) -> MicroBenchmarkKey:
+    """Map an algorithm at concrete sizes to its micro-benchmark identity."""
+    a_sh, b_sh, o_sh = alg.kernel_shapes(sizes)
+    dists = access_distance(alg, sizes)
+    classes = tuple(COLD if dists[op] > cache_bytes else WARM
+                    for op in ("A", "B"))
+    return MicroBenchmarkKey(alg.kernel_equation(), a_sh, b_sh, o_sh,
+                             classes)
+
+
+@dataclass(frozen=True)
+class MicroBenchmark:
+    """One measured micro-benchmark: per-call stats + first-call overhead."""
+
+    key: MicroBenchmarkKey
+    stats: Stats         # per-call runtime statistics (seconds)
+    first: float         # first-call overhead (compile + cold libraries, s)
+    seconds: float       # wall-clock cost of running this benchmark
+
+
+#: a measurement backend: (key, repetitions) -> (per-call stats, first)
+MeasureFn = Callable[[MicroBenchmarkKey, int], Tuple[Stats, float]]
+
+
+class MicroBenchmarkSuite:
+    """Runs each distinct micro-benchmark once and shares the result.
+
+    ``measure_fn`` defaults to the real cache-aware measurement; injecting a
+    deterministic function of the key (as the equivalence tests do) makes
+    deduplicated and per-algorithm predictions bit-comparable.  The suite is
+    reusable across predictors and specs — keys are self-contained — and
+    keeps running totals: :attr:`cost_seconds` (wall-clock spent measuring),
+    :attr:`requests` (benchmarks asked for) vs :attr:`n_benchmarks`
+    (distinct ones actually run).
+    """
+
+    def __init__(self, *, repetitions: int = 5,
+                 cache_bytes: int = CACHE_BYTES, seed: int = 0,
+                 measure_fn: Optional[MeasureFn] = None):
+        self.repetitions = repetitions
+        self.cache_bytes = cache_bytes
+        self.seed = seed
+        self.measure_fn: MeasureFn = measure_fn or self._measure
+        self.results: Dict[MicroBenchmarkKey, MicroBenchmark] = {}
+        self.requests = 0
+        self.cost_seconds = 0.0
+        self.oracle_cost_seconds = 0.0
+
+    # ------------------------------------------------------------- public --
+    def key_for(self, alg: ContractionAlgorithm,
+                sizes: Mapping[str, int]) -> MicroBenchmarkKey:
+        return benchmark_key(alg, sizes, self.cache_bytes)
+
+    def benchmark(self, alg: ContractionAlgorithm,
+                  sizes: Mapping[str, int]) -> MicroBenchmark:
+        """The (shared) micro-benchmark backing ``alg`` at ``sizes``."""
+        self.requests += 1
+        key = self.key_for(alg, sizes)
+        mb = self.results.get(key)
+        if mb is None:
+            mb = self._run(key)
+            self.results[key] = mb
+        return mb
+
+    def benchmark_fresh(self, alg: ContractionAlgorithm,
+                        sizes: Mapping[str, int]) -> MicroBenchmark:
+        """An independent, un-deduplicated measurement (the oracle path).
+
+        Accounted under :attr:`oracle_cost_seconds`, NOT
+        :attr:`cost_seconds`: validating against the oracle must not
+        inflate the suite's reported prediction cost.
+        """
+        return self._run(self.key_for(alg, sizes), oracle=True)
+
+    @property
+    def n_benchmarks(self) -> int:
+        """Distinct micro-benchmarks run so far (< requests under dedup)."""
+        return len(self.results)
+
+    def cost_fraction(self, measured_seconds: float) -> float:
+        """Suite cost as a fraction of a measured contraction runtime."""
+        return self.cost_seconds / measured_seconds
+
+    # ----------------------------------------------------------- internal --
+    def _run(self, key: MicroBenchmarkKey,
+             oracle: bool = False) -> MicroBenchmark:
+        t0 = time.perf_counter()
+        stats, first = self.measure_fn(key, self.repetitions)
+        seconds = time.perf_counter() - t0
+        if oracle:
+            self.oracle_cost_seconds += seconds
+        else:
+            self.cost_seconds += seconds
+        return MicroBenchmark(key=key, stats=stats, first=first,
+                              seconds=seconds)
+
+    def _measure(self, key: MicroBenchmarkKey,
+                 repetitions: int) -> Tuple[Stats, float]:
+        """The shared §6.2 protocol, reconstructed purely from the key."""
+        cls_a, cls_b = key.classes
+        return run_kernel_benchmark(
+            key.equation, key.a_shape, key.b_shape, key.out_shape,
+            cold_a=cls_a == COLD, cold_b=cls_b == COLD,
+            repetitions=repetitions, cache_bytes=self.cache_bytes,
+            rng=np.random.default_rng(self.seed))

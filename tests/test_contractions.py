@@ -4,8 +4,9 @@ import numpy as np
 import pytest
 
 from repro.core.contractions import (ContractionAlgorithm, ContractionSpec,
-                                     access_distance, execute,
-                                     execute_reference, generate_algorithms,
+                                     access_distance, cold_pool_size,
+                                     execute, execute_reference,
+                                     generate_algorithms,
                                      predict_contraction,
                                      rank_contraction_algorithms)
 
@@ -132,6 +133,31 @@ def test_access_distance_monotonic():
     d = access_distance(gemm, dict(a=100, b=100, c=100, i=8))
     assert set(d) == {"A", "B", "C"}
     assert all(v >= 0 for v in d.values())
+
+
+def test_cold_pool_not_capped():
+    """Regression: the cold-operand pool was hard-capped at 8 buffers, so
+    ``repetitions > 8`` cycled cold operands back into cache.  The pool must
+    grow with the repetition count until it spans the cache capacity."""
+    cache = 32 * 2 ** 20
+    assert cold_pool_size(32, 4 * (4 + 4 + 1), cache) == 33
+    # once cycling spans the cache, more buffers add nothing
+    assert cold_pool_size(32, cache // 2, cache) == 3
+
+
+def test_predict_contraction_includes_first_call_overhead():
+    spec = ContractionSpec.parse("ab=ai,ib")
+    sizes = dict(a=4, b=4, i=4)
+    alg = ContractionAlgorithm(spec, "gemm", ("a", "b", "i"), ())
+    bd = predict_contraction(alg, sizes, repetitions=2, breakdown=True)
+    assert set(bd) == {"total_s", "first_call_s", "loop_s", "per_call_s",
+                      "n_iterations"}
+    assert bd["n_iterations"] == 1
+    assert bd["first_call_s"] > 0
+    assert bd["total_s"] == pytest.approx(
+        bd["first_call_s"] + bd["per_call_s"] * bd["n_iterations"])
+    assert bd["loop_s"] == pytest.approx(
+        bd["per_call_s"] * bd["n_iterations"])
 
 
 @pytest.mark.slow
