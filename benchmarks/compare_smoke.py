@@ -27,6 +27,9 @@ TRACKED = (
     ("contractions", "tc_rank64_suite_s"),
     ("contractions", "tc_rank64_rank_numpy_s"),
     ("contractions", "tc_rank64_rank_jax_s"),
+    ("einsum_paths", "tc_chain_suite_s"),
+    ("einsum_paths", "tc_chain_rank_numpy_s"),
+    ("einsum_paths", "tc_chain_rank_jax_s"),
 )
 
 

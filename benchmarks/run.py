@@ -22,8 +22,9 @@ import traceback
 
 from . import (bench_algorithm_selection, bench_batched_sweep,
                bench_blocksize, bench_cache_effects, bench_contractions,
-               bench_model_accuracy, bench_prediction_accuracy,
-               bench_roofline, bench_tile_tuner, common)
+               bench_einsum_paths, bench_model_accuracy,
+               bench_prediction_accuracy, bench_roofline, bench_tile_tuner,
+               common)
 
 SUITES = {
     "model_accuracy": (bench_model_accuracy,
@@ -40,6 +41,8 @@ SUITES = {
                       "beyond-paper: batched engine vs scalar prediction"),
     "contractions": (bench_contractions,
                      "paper Ch 6: contraction micro-benchmark prediction"),
+    "einsum_paths": (bench_einsum_paths,
+                     "beyond-paper: einsum-path (chain) prediction"),
     "tile_tuner": (bench_tile_tuner,
                    "beyond-paper: Pallas BlockSpec tile selection"),
     "roofline": (bench_roofline,
@@ -47,9 +50,9 @@ SUITES = {
 }
 
 #: the CI smoke lane: the measurement-free prediction-path probe plus the
-#: (cheap, deduplicated) contraction-prediction probe with its tc_rank64_*
-#: metrics
-SMOKE_SUITES = ("batched_sweep", "contractions")
+#: (cheap, deduplicated) contraction probes with their tc_rank64_* and
+#: tc_chain_* metrics
+SMOKE_SUITES = ("batched_sweep", "contractions", "einsum_paths")
 
 
 def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:

@@ -21,8 +21,8 @@ from .refinement import GeneratorConfig, refine, stats_sample_fn
 from .sampler import STATS, Stats, measure_calls, measure_single
 from .selection import (RankedAlgorithm, optimize_algorithm_and_block_size,
                         optimize_block_size, performance_yield,
-                        rank_algorithms, select_algorithm,
-                        select_contraction_algorithm)
+                        rank_algorithms, rank_einsum_paths, select_algorithm,
+                        select_contraction_algorithm, select_einsum_path)
 
 __all__ = [
     "Polynomial", "StackedPolynomials", "error_measure", "fit_relative",
@@ -36,5 +36,6 @@ __all__ = [
     "stats_sample_fn", "STATS", "Stats", "measure_calls", "measure_single",
     "RankedAlgorithm", "optimize_algorithm_and_block_size",
     "optimize_block_size", "performance_yield", "rank_algorithms",
-    "select_algorithm", "select_contraction_algorithm",
+    "rank_einsum_paths", "select_algorithm",
+    "select_contraction_algorithm", "select_einsum_path",
 ]

@@ -103,6 +103,12 @@ class Piece:
 
 @dataclass
 class CaseModel:
+    """One kernel case's piecewise model: the pieces covering its domain.
+
+    ``estimate``/``estimate_batch`` look up the piece containing the
+    requested sizes and evaluate its per-statistic polynomials.
+    """
+
     pieces: List[Piece] = field(default_factory=list)
 
     def find_piece(self, sizes: Sequence[int]) -> Optional[Piece]:

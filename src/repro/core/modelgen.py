@@ -41,6 +41,9 @@ class KernelBenchmark:
 
 @dataclass
 class GenerationReport:
+    """What one model generation cost: measured points, pieces per case
+    and wall-clock seconds — the §3.3 accuracy-vs-cost bookkeeping."""
+
     kernel: str
     seconds: float
     measured_points: int
@@ -51,6 +54,15 @@ def generate_model(bench: KernelBenchmark,
                    config: GeneratorConfig = GeneratorConfig(),
                    setup: str = "default",
                    ) -> Tuple[PerformanceModel, GenerationReport]:
+    """Generate one kernel's performance model by adaptive refinement (§3.3).
+
+    For every case of ``bench``, measures the kernel over adaptively
+    refined sub-domains (:func:`~repro.core.refinement.refine` under
+    ``config``) and fits piecewise polynomials.  Returns the
+    :class:`~repro.core.model.PerformanceModel` plus a
+    :class:`GenerationReport` with the measured-point count, pieces per
+    case and wall-clock seconds.
+    """
     model = PerformanceModel(kernel=bench.name, setup=setup)
     t0 = time.perf_counter()
     total_points = 0
@@ -87,6 +99,12 @@ def generate_model_set(benches: Sequence[KernelBenchmark],
                        setup: str = "default",
                        verbose: bool = False,
                        ) -> Tuple[ModelSet, List[GenerationReport]]:
+    """Run :func:`generate_model` for every benchmark in ``benches``.
+
+    Returns the combined :class:`~repro.core.model.ModelSet` (one model
+    per kernel) and the per-kernel generation reports, optionally
+    printing a progress line per kernel when ``verbose``.
+    """
     ms = ModelSet()
     reports = []
     for bench in benches:

@@ -167,6 +167,8 @@ class TraceCache:
         self.hits = self.misses = 0
 
 
+#: evaluation backends a PredictionEngine can run its stacked polynomial
+#: models on
 BACKENDS = ("numpy", "jax")
 
 
@@ -312,4 +314,6 @@ def relative_error(pred: float, meas: float) -> float:
 
 
 def absolute_relative_error(pred: float, meas: float) -> float:
+    """``|pred - meas| / meas`` — the magnitude of :func:`relative_error`
+    (nan when the measurement is zero)."""
     return abs(relative_error(pred, meas))

@@ -23,6 +23,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Hashable, Iterable, List, Mapping
 
+#: the five summary statistics every measurement and prediction carries,
+#: in the column order of all batched (N, 5) statistics arrays
 STATS = ("min", "med", "max", "mean", "std")
 
 
@@ -89,4 +91,10 @@ def measure_calls(calls: Mapping[Hashable, Callable[[], None]],
 
 def measure_single(call: Callable[[], None], repetitions: int = 10,
                    **kw) -> Stats:
+    """Time one nullary ``call`` ``repetitions`` times and summarize.
+
+    Convenience wrapper over :func:`measure_calls` for a single call;
+    keyword arguments (``warm_pairs``, ``warmup``, ...) pass through.
+    Returns the per-call runtime :class:`Stats` in seconds.
+    """
     return measure_calls({"_": call}, repetitions, **kw)["_"]

@@ -33,6 +33,9 @@ from .sampler import STATS, Stats
 
 @dataclass(frozen=True)
 class RankedAlgorithm:
+    """One ranked blocked-algorithm variant: its name, predicted runtime
+    statistics, and the block size the prediction was made at."""
+
     name: str
     runtime: Stats
     block_size: int
@@ -70,6 +73,8 @@ def select_algorithm(tracers: Mapping[str, Tracer], models: ModelSet,
                      n: int, b: int, *, stat: str = "med",
                      batched: bool = True, backend: Optional[str] = None,
                      engine: Optional[PredictionEngine] = None) -> str:
+    """The name of the variant with the fastest predicted runtime —
+    ``rank_algorithms(...)[0].name``, same keywords."""
     return rank_algorithms(tracers, models, n, b, stat=stat, batched=batched,
                            backend=backend, engine=engine)[0].name
 
@@ -163,6 +168,64 @@ def select_contraction_algorithm(spec, sizes: Mapping[str, int], *,
     else:
         pred = ContractionPredictor(spec, sizes, repetitions=repetitions)
     return pred.rank(stat=stat, backend=backend or "numpy")[0].name
+
+
+def _resolve_chain_predictor(chain, sizes, repetitions, predictor):
+    """Build (or consistency-check a supplied) ChainPredictor."""
+    from ..tc.chains import ChainPredictor, ChainSpec  # lazy: tc needs core
+    if predictor is None:
+        return ChainPredictor(chain, sizes, repetitions=repetitions)
+    if repetitions is not None:
+        raise ValueError("repetitions= applies to a newly built predictor; "
+                         "the supplied predictor's suite already fixes it")
+    want = ChainSpec.parse(chain)
+    if predictor.chain != want or predictor.sizes != dict(sizes):
+        raise ValueError(
+            f"the supplied predictor was built for "
+            f"{predictor.chain.einsum_expr()} at {predictor.sizes}, not "
+            f"{want.einsum_expr()} at {dict(sizes)}; the selection would "
+            f"silently answer the wrong einsum")
+    return predictor
+
+
+def rank_einsum_paths(chain, sizes: Mapping[str, int], *,
+                      stat: str = "med",
+                      backend: Optional[str] = None,
+                      repetitions: Optional[int] = None,
+                      predictor=None):
+    """Rank every pairwise contraction path of an N-operand einsum.
+
+    The chain counterpart of :func:`rank_algorithms`: all candidate paths
+    (``chain`` is a :class:`repro.tc.ChainSpec` or an expression like
+    ``"ij,jk,kl->il"``) are predicted through one shared deduplicated
+    micro-benchmark suite and the batched engine
+    (``backend="numpy"|"jax"``) and returned fastest-first as
+    :class:`repro.tc.RankedChain` records — per-step winning algorithms
+    included.  Pass ``predictor=`` (a :class:`repro.tc.ChainPredictor`)
+    to reuse measurements and compiled batches across calls; the
+    step-by-step per-algorithm oracle remains available on the predictor
+    as :meth:`~repro.tc.ChainPredictor.rank_paths_oracle`.
+    """
+    pred = _resolve_chain_predictor(chain, sizes, repetitions, predictor)
+    return pred.rank_paths(stat=stat, backend=backend or "numpy")
+
+
+def select_einsum_path(chain, sizes: Mapping[str, int], *,
+                       stat: str = "med",
+                       backend: Optional[str] = None,
+                       repetitions: Optional[int] = None,
+                       predictor=None):
+    """The fastest-predicted contraction path of an N-operand einsum.
+
+    ``rank_einsum_paths(...)[0]``: one :class:`repro.tc.RankedChain`
+    carrying the chosen path (``.name`` is its nested-parenthesis form,
+    e.g. ``((0.1).(2.3))``), the selected algorithm per step and the
+    composed total-runtime prediction.  Same keywords as
+    :func:`rank_einsum_paths`.
+    """
+    return rank_einsum_paths(chain, sizes, stat=stat, backend=backend,
+                             repetitions=repetitions,
+                             predictor=predictor)[0]
 
 
 def performance_yield(measured_runtime: Mapping[int, float], b_pred: int,

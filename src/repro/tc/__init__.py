@@ -3,24 +3,37 @@
 Promotes the Ch. 6 scenario to a first-class subsystem on the batched
 prediction engine: a §6.1 generator extended with batched-kernel patterns
 (:mod:`~repro.tc.kernels`), a deduplicated cache-aware micro-benchmark
-suite that reports its own cost (:mod:`~repro.tc.suite`), and a
+suite that reports its own cost (:mod:`~repro.tc.suite`), a
 :class:`ContractionPredictor` that compiles the whole candidate set
 through the PR-1/2 :class:`~repro.core.predict.PredictionEngine`
-(:mod:`~repro.tc.predictor`).
+(:mod:`~repro.tc.predictor`), and an einsum-path layer that composes
+per-step predictors into multi-contraction chain rankings with
+cache-state propagation between steps (:mod:`~repro.tc.chains`).
+
+See ``docs/contraction-prediction.md`` for the full walkthrough.
 """
 
+from .chains import (MAX_OPERANDS, ChainPath, ChainPredictor, ChainSpec,
+                     ChainStep, RankedChain, compose_chain_runtime,
+                     execute_chain, execute_chain_reference,
+                     execute_path_reference, validate_paths)
 from .kernels import (BATCH_SUFFIX, BATCHABLE_KERNELS, base_kernel,
                       generate_algorithms, generate_batched_algorithms,
-                      is_batched_kernel, validate_algorithms)
+                      is_batched_kernel, kernel_batch_dims, slice_call_bytes,
+                      validate_algorithms)
 from .predictor import ContractionPredictor, RankedContraction
 from .suite import (COLD, WARM, MicroBenchmark, MicroBenchmarkKey,
-                    MicroBenchmarkSuite, benchmark_key)
+                    MicroBenchmarkSuite, benchmark_key, canonical_equation)
 
 __all__ = [
     "BATCH_SUFFIX", "BATCHABLE_KERNELS", "base_kernel",
     "generate_algorithms", "generate_batched_algorithms",
-    "is_batched_kernel", "validate_algorithms",
+    "is_batched_kernel", "kernel_batch_dims", "slice_call_bytes",
+    "validate_algorithms",
     "ContractionPredictor", "RankedContraction",
     "COLD", "WARM", "MicroBenchmark", "MicroBenchmarkKey",
-    "MicroBenchmarkSuite", "benchmark_key",
+    "MicroBenchmarkSuite", "benchmark_key", "canonical_equation",
+    "MAX_OPERANDS", "ChainPath", "ChainPredictor", "ChainSpec", "ChainStep",
+    "RankedChain", "compose_chain_runtime", "execute_chain",
+    "execute_chain_reference", "execute_path_reference", "validate_paths",
 ]

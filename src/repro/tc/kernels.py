@@ -26,12 +26,14 @@ dropped, and :func:`validate_algorithms` checks every survivor against
 from __future__ import annotations
 
 import itertools
-from typing import List, Mapping, Optional, Sequence
+import math
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.contractions import (ContractionAlgorithm, ContractionSpec,
-                                 _KERNEL_PATTERNS, execute, execute_reference)
+                                 _ITEM, _KERNEL_PATTERNS, execute,
+                                 execute_reference)
 from ..core.contractions import generate_algorithms as generate_loop_algorithms
 
 #: kernel-name suffix marking the batched-kernel class
@@ -42,12 +44,51 @@ BATCHABLE_KERNELS = ("gemm", "gemv", "gevm", "dot")
 
 
 def is_batched_kernel(kernel: str) -> bool:
+    """Whether ``kernel`` belongs to the batched-kernel class (name carries
+    the ``_batch`` suffix, e.g. ``"gemm_batch"``)."""
     return kernel.endswith(BATCH_SUFFIX)
 
 
 def base_kernel(kernel: str) -> str:
     """The plain-BLAS kernel a (possibly batched) kernel is built on."""
     return kernel[:-len(BATCH_SUFFIX)] if is_batched_kernel(kernel) else kernel
+
+
+def kernel_batch_dims(alg: ContractionAlgorithm) -> Tuple[str, ...]:
+    """The kernel dims ``alg`` absorbed as batch dimensions.
+
+    Empty for plain kernels.  For batched kernels this relies on the
+    generator's layout contract: ``kernel_dims`` is always the base
+    pattern's dims (free-A, free-B, contracted — their count fixed by
+    :data:`_KERNEL_PATTERNS`) followed by the absorbed output indices, so
+    the batch dims are exactly the tail beyond the base pattern's arity.
+    """
+    if not is_batched_kernel(alg.kernel):
+        return ()
+    nfa, nfb, nc = _KERNEL_PATTERNS[base_kernel(alg.kernel)]
+    return alg.kernel_dims[nfa + nfb + nc:]
+
+
+def slice_call_bytes(alg: ContractionAlgorithm,
+                     sizes: Mapping[str, int]) -> int:
+    """Bytes one *batch slice* of a kernel call touches.
+
+    A batched kernel walks its batch dimensions slice by slice — strided
+    access where at any instant the cache holds one slice's working set,
+    not the whole stacked operands.  The footprint relevant for cache
+    classification is therefore the per-slice call bytes: each operand
+    contributes the product of its non-batch kernel-dim extents (operands
+    that lack a batch dim are broadcast, i.e. shared by every slice, and
+    contribute their full kernel footprint).  For plain kernels this
+    equals the whole call's bytes.
+    """
+    batch = set(kernel_batch_dims(alg))
+    spec = alg.spec
+    total = 0
+    for idx in (spec.a_idx, spec.b_idx, spec.out_idx):
+        dims = [i for i in idx if i in alg.kernel_dims and i not in batch]
+        total += math.prod(sizes[i] for i in dims)
+    return _ITEM * total
 
 
 def generate_batched_algorithms(

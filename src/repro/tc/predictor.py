@@ -81,15 +81,23 @@ def _total_stats(mb: MicroBenchmark, n: int) -> Stats:
 
 @dataclass(frozen=True)
 class RankedContraction:
-    """One ranked traversal x kernel combination."""
+    """One ranked traversal x kernel combination.
+
+    ``runtime`` is the predicted TOTAL (first-call overhead included
+    once); ``first`` exposes that overhead separately so chain
+    composition (:mod:`repro.tc.chains`) can count it once per distinct
+    ``benchmark`` signature instead of once per step.
+    """
 
     algorithm: ContractionAlgorithm
     runtime: Stats                 # predicted TOTAL runtime (incl. overhead)
     n_iterations: int
     benchmark: MicroBenchmarkKey   # the suite measurement backing it
+    first: float                   # measured first-call overhead (seconds)
 
     @property
     def name(self) -> str:
+        """The backing algorithm's display name."""
         return self.algorithm.name
 
 
@@ -111,10 +119,14 @@ class ContractionPredictor:
                  include_batched: bool = True,
                  repetitions: Optional[int] = None,
                  suite: Optional[MicroBenchmarkSuite] = None,
-                 cache: Optional[TraceCache] = None):
+                 cache: Optional[TraceCache] = None,
+                 arrival: Optional[Mapping[str, str]] = None):
         self.spec = spec if isinstance(spec, ContractionSpec) else \
             ContractionSpec.parse(spec)
         self.sizes = dict(sizes)
+        # known operand arrival classes ("A"/"B" -> WARM/COLD), forwarded
+        # into every suite key — how chain steps see their intermediates
+        self.arrival = dict(arrival) if arrival else None
         self.algorithms: List[ContractionAlgorithm] = (
             list(algorithms) if algorithms is not None
             else generate_algorithms(self.spec,
@@ -146,7 +158,8 @@ class ContractionPredictor:
         """Run the (deduplicated) suite and compile the candidate models."""
         if self._models is not None:
             return
-        benchmarks = [self.suite.benchmark(alg, self.sizes)
+        benchmarks = [self.suite.benchmark(alg, self.sizes,
+                                           arrival=self.arrival)
                       for alg in self.algorithms]
         models = ModelSet()
         seqs: List[Tuple[KernelCall, ...]] = []
@@ -198,7 +211,8 @@ class ContractionPredictor:
                     algorithm=self.algorithms[i],
                     runtime=Stats(*map(float, arr[i])),
                     n_iterations=self.algorithms[i].n_iterations(self.sizes),
-                    benchmark=self._benchmarks[i].key)
+                    benchmark=self._benchmarks[i].key,
+                    first=self._benchmarks[i].first)
                 for i in order]
 
     def rank_oracle(self, *, stat: str = "med",
@@ -213,12 +227,15 @@ class ContractionPredictor:
         deterministically even with noisy real timings."""
         out = []
         for alg in self.algorithms:
-            mb = self.suite.benchmark_fresh(alg, self.sizes) if fresh \
-                else self.suite.benchmark(alg, self.sizes)
+            mb = self.suite.benchmark_fresh(alg, self.sizes,
+                                            arrival=self.arrival) if fresh \
+                else self.suite.benchmark(alg, self.sizes,
+                                          arrival=self.arrival)
             n = alg.n_iterations(self.sizes)
             out.append(RankedContraction(algorithm=alg,
                                          runtime=_total_stats(mb, n),
-                                         n_iterations=n, benchmark=mb.key))
+                                         n_iterations=n, benchmark=mb.key,
+                                         first=mb.first))
         out.sort(key=lambda r: getattr(r.runtime, stat))
         return out
 

@@ -6,7 +6,23 @@ traversals call the *same* kernel on the *same* operand shapes under the
 The suite exploits that: each candidate maps to a
 :class:`MicroBenchmarkKey` — (kernel equation, kernel operand shapes,
 cache class per operand) — and each distinct key is measured exactly once,
-shared across every algorithm that maps to it.
+shared across every algorithm that maps to it.  The equation is stored
+*canonically relabeled* (:func:`canonical_equation`): an einsum is
+invariant under index renaming, so ``ij,jk->ik`` and ``ik,kl->il`` at
+equal shapes are the same measurement — which is what lets the steps of a
+multi-contraction chain (:mod:`repro.tc.chains`) share one suite.
+
+Cache classes come from the §6.2.3 access distance, with two refinements:
+
+* **batched kernels classify per batch slice** — a batched kernel walks
+  its batch dims strided, so the cache working set is one slice's
+  operands, not the whole stacked call
+  (:func:`~repro.tc.kernels.slice_call_bytes`);
+* callers may pass **arrival overrides** (``arrival={"A": COLD}``):
+  an operand known to arrive cold — e.g. a chain intermediate bigger than
+  the cache — is forced cold regardless of its in-loop reuse distance.
+  A warm arrival adds nothing the distance does not already say, so only
+  COLD overrides have an effect.
 
 The measurement itself is the shared §6.2 protocol
 (:func:`~repro.core.contractions.run_kernel_benchmark` — also backing the
@@ -33,8 +49,10 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 import numpy as np
 
 from ..core.contractions import (CACHE_BYTES, _ITEM, ContractionAlgorithm,
-                                 access_distance, run_kernel_benchmark)
+                                 access_distance, canonical_equation,
+                                 run_kernel_benchmark)
 from ..core.sampler import Stats
+from .kernels import is_batched_kernel, slice_call_bytes
 
 #: cache classes an operand can be benchmarked under
 WARM, COLD = "warm", "cold"
@@ -49,7 +67,7 @@ class MicroBenchmarkKey:
     serves both — the suite's deduplication signature.
     """
 
-    equation: str                      # kernel einsum, e.g. "bij,bjk->bik"
+    equation: str                      # CANONICAL kernel einsum, "ab,bc->ac"
     a_shape: Tuple[int, ...]
     b_shape: Tuple[int, ...]
     out_shape: Tuple[int, ...]
@@ -63,14 +81,34 @@ class MicroBenchmarkKey:
 
 
 def benchmark_key(alg: ContractionAlgorithm, sizes: Mapping[str, int],
-                  cache_bytes: int = CACHE_BYTES) -> MicroBenchmarkKey:
-    """Map an algorithm at concrete sizes to its micro-benchmark identity."""
+                  cache_bytes: int = CACHE_BYTES, *,
+                  arrival: Optional[Mapping[str, str]] = None,
+                  ) -> MicroBenchmarkKey:
+    """Map an algorithm at concrete sizes to its micro-benchmark identity.
+
+    The equation is stored canonically relabeled; classes come from the
+    §6.2.3 access distance against ``cache_bytes``.  For batched kernels
+    the distance is rescaled to one *batch slice's* call bytes (strided
+    batch access: the cache working set is one slice, not the stacked
+    operands).  ``arrival`` maps operand names (``"A"``/``"B"``) to a
+    known arrival class: ``COLD`` forces the operand cold (a chain
+    intermediate that cannot fit in cache arrives evicted no matter how
+    tight the in-loop reuse is); ``WARM`` defers to the distance.
+    """
     a_sh, b_sh, o_sh = alg.kernel_shapes(sizes)
-    dists = access_distance(alg, sizes)
-    classes = tuple(COLD if dists[op] > cache_bytes else WARM
-                    for op in ("A", "B"))
-    return MicroBenchmarkKey(alg.kernel_equation(), a_sh, b_sh, o_sh,
-                             classes)
+    dists = dict(access_distance(alg, sizes))
+    if is_batched_kernel(alg.kernel):
+        call_bytes = _ITEM * (math.prod(a_sh) + math.prod(b_sh) +
+                              math.prod(o_sh))
+        scale = slice_call_bytes(alg, sizes) / call_bytes
+        dists = {op: d * scale for op, d in dists.items()}
+    arrival = arrival or {}
+    classes = tuple(
+        COLD if (dists[op] > cache_bytes or arrival.get(op) == COLD)
+        else WARM
+        for op in ("A", "B"))
+    return MicroBenchmarkKey(canonical_equation(alg.kernel_equation()),
+                             a_sh, b_sh, o_sh, classes)
 
 
 @dataclass(frozen=True)
@@ -112,15 +150,24 @@ class MicroBenchmarkSuite:
         self.oracle_cost_seconds = 0.0
 
     # ------------------------------------------------------------- public --
-    def key_for(self, alg: ContractionAlgorithm,
-                sizes: Mapping[str, int]) -> MicroBenchmarkKey:
-        return benchmark_key(alg, sizes, self.cache_bytes)
+    def key_for(self, alg: ContractionAlgorithm, sizes: Mapping[str, int],
+                *, arrival: Optional[Mapping[str, str]] = None,
+                ) -> MicroBenchmarkKey:
+        """The dedup signature of ``alg`` at ``sizes`` under this suite's
+        cache capacity (see :func:`benchmark_key` for ``arrival``)."""
+        return benchmark_key(alg, sizes, self.cache_bytes, arrival=arrival)
 
     def benchmark(self, alg: ContractionAlgorithm,
-                  sizes: Mapping[str, int]) -> MicroBenchmark:
-        """The (shared) micro-benchmark backing ``alg`` at ``sizes``."""
+                  sizes: Mapping[str, int], *,
+                  arrival: Optional[Mapping[str, str]] = None,
+                  ) -> MicroBenchmark:
+        """The (shared) micro-benchmark backing ``alg`` at ``sizes``.
+
+        ``arrival`` forwards known operand arrival classes into the key
+        (chain intermediates); identical keys share one measurement.
+        """
         self.requests += 1
-        key = self.key_for(alg, sizes)
+        key = self.key_for(alg, sizes, arrival=arrival)
         mb = self.results.get(key)
         if mb is None:
             mb = self._run(key)
@@ -128,14 +175,17 @@ class MicroBenchmarkSuite:
         return mb
 
     def benchmark_fresh(self, alg: ContractionAlgorithm,
-                        sizes: Mapping[str, int]) -> MicroBenchmark:
+                        sizes: Mapping[str, int], *,
+                        arrival: Optional[Mapping[str, str]] = None,
+                        ) -> MicroBenchmark:
         """An independent, un-deduplicated measurement (the oracle path).
 
         Accounted under :attr:`oracle_cost_seconds`, NOT
         :attr:`cost_seconds`: validating against the oracle must not
         inflate the suite's reported prediction cost.
         """
-        return self._run(self.key_for(alg, sizes), oracle=True)
+        return self._run(self.key_for(alg, sizes, arrival=arrival),
+                         oracle=True)
 
     @property
     def n_benchmarks(self) -> int:

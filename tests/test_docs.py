@@ -1,0 +1,91 @@
+"""Tier-1 docs checks: every exported name is documented, and the docs
+site's internal links resolve.
+
+Snippet *execution* (the slower half of the docs lint) runs in the CI
+fast lane as a separate step: ``python tools/check_docs.py``.
+"""
+
+import importlib.util
+import inspect
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+import repro.core
+import repro.tc
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", ROOT / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _documented_constants(package) -> set:
+    """Names assigned in any of the package's modules directly under a
+    ``#:`` doc comment (the Sphinx convention this codebase uses)."""
+    out = set()
+    for name, mod in sys.modules.items():
+        if not name.startswith(package.__name__):
+            continue
+        try:
+            src = inspect.getsource(mod).splitlines()
+        except (OSError, TypeError):
+            continue
+        for i, line in enumerate(src):
+            # plain or annotated assignments, tuple targets included:
+            # "NAME = ...", "NAME: int = ...", "WARM, COLD = ..."
+            m = re.match(
+                r"([A-Za-z_]\w*(?:\s*,\s*[A-Za-z_]\w*)*)\s*(?::[^=]+)?=",
+                line)
+            if not m:
+                continue
+            j = i - 1
+            while j >= 0 and src[j].lstrip().startswith("#"):
+                if src[j].lstrip().startswith("#:"):
+                    out.update(p.strip() for p in m.group(1).split(","))
+                    break
+                j -= 1
+    return out
+
+
+@pytest.mark.parametrize("mod", [repro.core, repro.tc],
+                         ids=["core", "tc"])
+def test_all_exports_have_docstrings(mod):
+    """Every ``__all__`` member: functions/classes carry a real docstring
+    (a dataclass's auto-generated signature doc does not count), and
+    constants carry a ``#:`` doc comment at their definition."""
+    constants = _documented_constants(mod)
+    missing = []
+    for name in mod.__all__:
+        obj = getattr(mod, name)
+        if inspect.isclass(obj) or inspect.isroutine(obj):
+            doc = inspect.getdoc(obj) or ""
+            if not doc.strip() or doc.startswith(f"{name}("):
+                missing.append(name)
+        elif name not in constants:
+            missing.append(name)
+    assert not missing, (f"{mod.__name__}: undocumented exports: "
+                         f"{sorted(missing)}")
+
+
+def test_docs_internal_links_resolve():
+    check = _load_check_docs()
+    problems = []
+    for path in check.doc_files([]):
+        problems += check.check_links(path)
+    assert not problems, "\n".join(problems)
+
+
+def test_docs_have_runnable_snippets():
+    # the walkthrough docs must keep executable examples (the CI lint
+    # step executes them; here we only pin that they exist)
+    check = _load_check_docs()
+    for name in ("prediction-pipeline.md", "contraction-prediction.md"):
+        assert check.snippets_of(ROOT / "docs" / name), name

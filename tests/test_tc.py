@@ -9,8 +9,9 @@ from repro.core.contractions import (ContractionSpec, cold_pool_size,
 from repro.core.contractions import generate_algorithms as loop_algorithms
 from repro.core.sampler import STATS, Stats
 from repro.core.selection import select_contraction_algorithm
-from repro.tc import (ContractionPredictor, MicroBenchmarkSuite,
-                      benchmark_key, generate_algorithms, is_batched_kernel,
+from repro.tc import (COLD, WARM, ContractionPredictor, MicroBenchmarkSuite,
+                      benchmark_key, canonical_equation, generate_algorithms,
+                      is_batched_kernel, kernel_batch_dims, slice_call_bytes,
                       validate_algorithms)
 
 RNG = np.random.default_rng(7)
@@ -94,6 +95,72 @@ def test_cold_pool_size_scales_with_repetitions():
 
 
 # ------------------------------------------------------------------ suite --
+
+def _one_call_gemm_batch(spec):
+    return next(a for a in generate_algorithms(spec)
+                if a.kernel == "gemm_batch" and not a.loop_order)
+
+
+def test_batched_kernel_classes_are_per_batch_slice():
+    # strided batch access: the cache working set of a batched kernel is
+    # ONE slice's operands.  At b=16, n=512 the stacked call is 48 MB
+    # (beyond the 32 MB capacity) but a slice is 3 MB — the operands must
+    # classify WARM, where whole-operand accounting said cold.
+    spec = ContractionSpec.parse("bij,bjk->bik")
+    alg = _one_call_gemm_batch(spec)
+    assert kernel_batch_dims(alg) == ("b",)
+    sizes = dict(b=16, i=512, j=512, k=512)
+    assert slice_call_bytes(alg, sizes) == 4 * 3 * 512 * 512
+    assert benchmark_key(alg, sizes).classes == (WARM, WARM)
+    # a slice that itself overflows the cache stays cold
+    big = dict(b=2, i=2048, j=2048, k=2048)
+    assert benchmark_key(alg, big).classes == (COLD, COLD)
+    # plain kernels are untouched by the slice rule
+    plain = next(a for a in loop_algorithms(spec) if a.kernel == "gemm")
+    assert kernel_batch_dims(plain) == ()
+    a_sh, b_sh, o_sh = plain.kernel_shapes(sizes)
+    assert slice_call_bytes(plain, sizes) == 4 * (
+        np.prod(a_sh) + np.prod(b_sh) + np.prod(o_sh))
+
+
+def test_benchmark_keys_canonicalize_equations():
+    # einsum is invariant under index renaming: ij,jk->ik and ik,kl->il at
+    # equal shapes are ONE measurement (what lets chain steps share a suite)
+    assert canonical_equation("ik,kl->il") == "ab,bc->ac"
+    assert canonical_equation("bij,bjk->bik") == "abc,acd->abd"
+    a1 = loop_algorithms(ContractionSpec.parse("ij,jk->ik"))
+    a2 = loop_algorithms(ContractionSpec.parse("ik,kl->il"))
+    sizes1 = dict(i=8, j=8, k=8)
+    sizes2 = dict(i=8, k=8, l=8)
+    keys1 = {benchmark_key(a, sizes1) for a in a1}
+    keys2 = {benchmark_key(a, sizes2) for a in a2}
+    assert keys1 == keys2
+    suite = fake_suite()
+    for a in a1:
+        suite.benchmark(a, sizes1)
+    n = suite.n_benchmarks
+    for a in a2:
+        suite.benchmark(a, sizes2)
+    assert suite.n_benchmarks == n     # nothing new to measure
+
+
+def test_arrival_override_forces_cold():
+    spec = ContractionSpec.parse("ij,jk->ik")
+    sizes = dict(i=8, j=8, k=8)
+    alg = loop_algorithms(spec)[0]
+    warm = benchmark_key(alg, sizes)
+    assert warm.classes == (WARM, WARM)
+    forced = benchmark_key(alg, sizes, arrival={"A": COLD})
+    assert forced.classes == (COLD, WARM)
+    # WARM arrival defers to the access distance: no-op on a warm operand
+    assert benchmark_key(alg, sizes, arrival={"A": WARM}) == warm
+    # distinct keys => distinct measurements in the suite
+    suite = fake_suite()
+    mb_warm = suite.benchmark(alg, sizes)
+    mb_cold = suite.benchmark(alg, sizes, arrival={"A": COLD})
+    assert mb_warm.key != mb_cold.key
+    assert suite.n_benchmarks == 2
+
 
 def test_suite_deduplicates_and_accounts_cost():
     spec = ContractionSpec.parse("bij,bjk->bik")
