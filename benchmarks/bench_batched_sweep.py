@@ -6,9 +6,12 @@ per-call reference path vs the vectorized :class:`PredictionEngine`, checks
 that both select the same configuration with statistics agreeing to ~1e-10,
 and reports the sweep speedup.  It also pits the engine's backends against
 each other on a fixed 64-candidate sweep: the plain NumPy batched path
-(re-traced every call, as in PR 1) vs the jitted + trace-cached path
-(``backend="jax"`` with the whole candidate set compiled once) — the
-``sweep64_*`` metrics CI tracks across commits.  The models are analytic
+(re-traced every call, as in PR 1), the numpy + trace-cached path, the
+pre-fusion per-group jax path (one jitted program per (kernel, case)
+group plus host-side bincounts) and the fused path (``backend="jax"``
+with the whole compiled batch as ONE jitted dispatch) — the
+``sweep64_*`` metrics CI tracks across commits, including the
+fused-vs-grouped speedup and the jax-vs-numpy backend ratio.  The models are analytic
 (measurement-free, ``common.synthetic_model_set``), so the suite runs
 identically on any machine — it is also the CI smoke lane's
 perf-trajectory probe.
@@ -84,26 +87,39 @@ def run(report: List[str],
     # the PR-1 baseline: numpy batched, re-tracing the candidates per call
     cand64 = [8 * (i + 1) for i in range(64)]
     t_np64 = _best_of(lambda: PredictionEngine(ms).sweep(
-        tracer, n, cand64), max(reps, 3))
-    # jitted + trace-cached: candidate set compiled once, stacked
-    # polynomials evaluated as jitted XLA programs
+        tracer, n, cand64), max(reps, 15))
+    # fused + trace-cached: candidate set compiled once, the WHOLE batch
+    # (piece lookup, matmuls and the config scatter-add) one jitted
+    # XLA dispatch per sweep
     eng_jax = PredictionEngine(ms, backend="jax")
     sweep_jax = eng_jax.sweep(tracer, n, cand64)        # jit + trace warmup
     t_jax64 = _best_of(lambda: eng_jax.sweep(tracer, n, cand64),
-                       max(reps, 3))
+                       max(reps, 15))
+    # the pre-fusion reference: one jitted program per (kernel, case)
+    # group plus host-side bincounts — what the fused path must beat >=2x
+    compiled64 = eng_jax.compile_sweep(tracer, n, cand64)
+    sweep_jax_grouped = eng_jax.predict_compiled_grouped(compiled64)
+    t_jax64_grouped = _best_of(
+        lambda: eng_jax.predict_compiled_grouped(compiled64), max(reps, 15))
     # numpy + trace-cached isolates the cache's share of the win
     eng_np = PredictionEngine(ms)
     sweep_np = eng_np.sweep(tracer, n, cand64)
     t_npc64 = _best_of(lambda: eng_np.sweep(tracer, n, cand64),
-                       max(reps, 3))
+                       max(reps, 15))
     max_rel_backend = float(np.max(
         np.abs(sweep_jax - sweep_np) / np.maximum(np.abs(sweep_np), 1e-300)))
+    max_rel_fused = float(np.max(
+        np.abs(sweep_jax - sweep_jax_grouped) /
+        np.maximum(np.abs(sweep_jax_grouped), 1e-300)))
     report.append(
         f"64-candidate sweep n={n}: numpy={t_np64 * 1e3:6.2f}ms "
         f"numpy+cache={t_npc64 * 1e3:6.2f}ms "
-        f"jax+cache={t_jax64 * 1e3:6.2f}ms "
-        f"speedup={t_np64 / t_jax64:6.1f}x "
-        f"max_rel_backend_diff={max_rel_backend:.1e}")
+        f"jax grouped={t_jax64_grouped * 1e3:6.2f}ms "
+        f"jax fused={t_jax64 * 1e3:6.2f}ms "
+        f"fused_speedup={t_jax64_grouped / t_jax64:4.1f}x "
+        f"jax{'<' if t_jax64 < t_npc64 else '>='}numpy "
+        f"max_rel_backend_diff={max_rel_backend:.1e} "
+        f"max_rel_fused_diff={max_rel_fused:.1e}")
 
     # ---- full (n, b) grid in one shot ----
     engine = PredictionEngine(ms)
@@ -133,8 +149,12 @@ def run(report: List[str],
             "sweep64_numpy_s": t_np64,
             "sweep64_numpy_cached_s": t_npc64,
             "sweep64_jax_cached_s": t_jax64,
+            "sweep64_jax_grouped_s": t_jax64_grouped,
+            "sweep64_fused_speedup": t_jax64_grouped / t_jax64,
+            "sweep64_jax_beats_numpy": bool(t_jax64 < t_npc64),
             "sweep64_speedup": t_np64 / t_jax64,
             "max_rel_backend_diff": max_rel_backend,
+            "max_rel_fused_diff": max_rel_fused,
             "grid_configs": len(ns) * n_cand, "grid_s": t_grid,
         })
 

@@ -12,7 +12,14 @@ Smoke mode (the CI lane): the batched spec at i=j=k=64 — the ``tc_rank64_*``
 metrics CI tracks across commits: suite cost, rank time on both engine
 backends, and the suite cost as a fraction of one measured contraction
 execution (a pinned representative candidate, executed once, so the
-denominator's identity cannot drift with the ranking).
+denominator's identity cannot drift with the ranking).  A second smoke
+section exercises size-sweep autotuning (``tc_sweep_*``): the same
+candidate set ranked across three batch sizes from the SAME suite the
+single-size ranking already filled — sweeping the loop-only dimension
+``b`` re-predicts the loop-nest candidates without any new measurement
+(only batched-kernel signatures, whose shapes contain ``b``, are new),
+and the whole sweep's suite cost must stay < 0.25 of the one pinned
+execution.
 """
 
 from __future__ import annotations
@@ -24,7 +31,8 @@ import numpy as np
 
 from repro.core.contractions import (ContractionSpec, execute,
                                      measure_contraction)
-from repro.tc import ContractionPredictor, is_batched_kernel
+from repro.tc import (ContractionPredictor, is_batched_kernel,
+                      rank_contraction_sweep)
 
 from .common import best_of as _best_of
 from .common import is_smoke
@@ -37,6 +45,9 @@ CASES = [
 
 SMOKE_SPEC = "bij,bjk->bik"
 SMOKE_SIZES = dict(b=8, i=64, j=64, k=64)
+#: size-sweep smoke grid: b is loop-only for every non-batched candidate,
+#: so two of the three points re-predict from b=8's measurements
+SWEEP_GRID = [dict(SMOKE_SIZES, b=b) for b in (8, 16, 32)]
 
 
 def _operands(spec: ContractionSpec, sizes, seed: int = 0):
@@ -131,6 +142,43 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
         "tc_rank64_oracle_agree": bool(oracle_agree),
         "tc_rank64_exec_s": t_exec,
         "tc_rank64_cost_fraction": fraction,
+    })
+
+    # ---- size-sweep autotuning over 3 batch sizes, ONE shared suite ----
+    # the single-size ranking above already measured every signature at
+    # b=8; sweeping b re-predicts the loop-nest candidates for free and
+    # only measures the batched-kernel signatures whose shapes contain b
+    before = pred.suite.counters()
+    sweep = rank_contraction_sweep(spec, SWEEP_GRID, suite=pred.suite,
+                                   cache=pred.cache, backend="numpy")
+    added = pred.suite.counters()
+    t_sweep_np = _best_of(lambda: [p.rank(backend="numpy")
+                                   for p in sweep.predictors], 3)
+    [p.rank(backend="jax") for p in sweep.predictors]   # compile warmup
+    t_sweep_jax = _best_of(lambda: [p.rank(backend="jax")
+                                    for p in sweep.predictors], 3)
+    new_benchmarks = int(added["n_benchmarks"] - before["n_benchmarks"])
+    # the pinned execution above is the denominator: the TOTAL suite cost
+    # (single-size ranking + whole sweep) must stay a fraction of ONE run
+    sweep_fraction = sweep.cost_fraction(t_exec)
+    report.append(
+        f"tc_sweep {SMOKE_SPEC} b={[g['b'] for g in SWEEP_GRID]}: "
+        f"points={len(SWEEP_GRID)} new_benchmarks={new_benchmarks} "
+        f"(total {sweep.n_benchmarks}) suite={sweep.suite.cost_seconds:5.2f}s")
+    report.append(
+        f"  rank all points: numpy={t_sweep_np * 1e3:6.2f}ms "
+        f"jax={t_sweep_jax * 1e3:6.2f}ms "
+        f"winners={'|'.join(w.name[:24] for w in sweep.winners)} -> "
+        f"total suite cost fraction {sweep_fraction:5.3f} "
+        f"({'<' if sweep_fraction < 0.25 else '>='} 0.25 target)")
+    results.update({
+        "tc_sweep_points": len(SWEEP_GRID),
+        "tc_sweep_new_benchmarks": new_benchmarks,
+        "tc_sweep_benchmarks": sweep.n_benchmarks,
+        "tc_sweep_suite_s": sweep.suite.cost_seconds,
+        "tc_sweep_rank_numpy_s": t_sweep_np,
+        "tc_sweep_rank_jax_s": t_sweep_jax,
+        "tc_sweep_cost_fraction": sweep_fraction,
     })
 
 

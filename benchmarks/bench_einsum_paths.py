@@ -19,7 +19,10 @@ compile per distinct signature — the full-mode run keeps the complete
 set.  The ``tc_chain_*`` metrics CI tracks across commits: suite cost,
 path-rank time on both engine backends, backend and oracle agreement on
 the top-ranked path, and the suite cost as a fraction of ONE execution
-of the chosen chain (< 0.25 required).
+of the chosen chain (< 0.25 required).  A ``tc_sweep_chain_*`` section
+re-ranks the same chain across three values of ``a`` from the SAME
+suite — size-sweep autotuning at the einsum-path level, with the total
+suite cost still a fraction of one chosen-chain execution.
 """
 
 from __future__ import annotations
@@ -30,7 +33,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.tc import (ChainPredictor, ChainSpec, execute_chain,
-                      execute_chain_reference)
+                      execute_chain_reference, rank_einsum_sweep)
 
 from .common import best_of as _best_of
 from .common import is_smoke
@@ -51,6 +54,9 @@ SMOKE_LIMIT = 96 * 2 ** 20
 SMOKE_REPETITIONS = 2
 SMOKE_LOOP_PERMS = 2
 SMOKE_KERNELS = ("gemm", "gemv", "gevm")
+#: chain-level size-sweep grid: vary ``a`` (a loop/batch-like output
+#: dimension) so most step signatures are shared with the a=4 run above
+SWEEP_A = (4, 8, 16)
 
 
 def _operands(chain: ChainSpec, sizes, seed: int = 0):
@@ -144,6 +150,32 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
         "tc_chain_oracle_agree": bool(oracle_top_agree),
         "tc_chain_exec_s": t_exec,
         "tc_chain_cost_fraction": fraction,
+    })
+
+    # ---- chain-level size sweep: 3 values of a, SAME suite ----
+    # the a=4 ranking above already measured most step signatures; new
+    # points only measure the signatures whose shapes contain a
+    before = pred.suite.counters()
+    grid = [dict(SMOKE_SIZES, a=a) for a in SWEEP_A]
+    sweep = rank_einsum_sweep(chain, grid, suite=pred.suite,
+                              cache=pred.cache, include_batched=False,
+                              kernels=SMOKE_KERNELS,
+                              max_loop_perms=SMOKE_LOOP_PERMS,
+                              memory_limit_bytes=SMOKE_LIMIT)
+    added = pred.suite.counters()
+    new_benchmarks = int(added["n_benchmarks"] - before["n_benchmarks"])
+    sweep_fraction = sweep.cost_fraction(t_exec)
+    report.append(
+        f"tc_sweep_chain a={list(SWEEP_A)}: points={len(grid)} "
+        f"new_benchmarks={new_benchmarks} (total {sweep.n_benchmarks}) "
+        f"winners={'|'.join(w.name for w in sweep.winners)} -> "
+        f"total suite cost fraction {sweep_fraction:5.3f} "
+        f"({'<' if sweep_fraction < 0.25 else '>='} 0.25 target)")
+    results.update({
+        "tc_sweep_chain_points": len(grid),
+        "tc_sweep_chain_new_benchmarks": new_benchmarks,
+        "tc_sweep_chain_suite_s": sweep.suite.cost_seconds,
+        "tc_sweep_chain_cost_fraction": sweep_fraction,
     })
 
 

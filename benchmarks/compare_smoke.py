@@ -11,6 +11,12 @@ current one is written.  A tracked metric that grew by more than
 still passes — smoke timings on shared runners are noisy, so regressions
 are flagged for a human, not hard-failed).  Unreadable artifacts are also
 only warned about; the exit code is always 0.
+
+Besides cross-commit trends, the CURRENT artifact alone is checked for
+backend inversions: the fused jax path must not be slower than its numpy
+counterpart (the original motivation for fusing the engine into one XLA
+program), so every ``BACKEND_RATIOS`` pair warns when jax > numpy —
+also when no previous artifact exists (pass ``-`` as PREVIOUS).
 """
 
 from __future__ import annotations
@@ -22,14 +28,27 @@ import json
 TRACKED = (
     ("batched_sweep", "sweep64_jax_cached_s"),
     ("batched_sweep", "sweep64_numpy_s"),
+    ("batched_sweep", "sweep64_numpy_cached_s"),
     ("batched_sweep", "sweep_batched_s"),
     ("batched_sweep", "grid_s"),
     ("contractions", "tc_rank64_suite_s"),
     ("contractions", "tc_rank64_rank_numpy_s"),
     ("contractions", "tc_rank64_rank_jax_s"),
+    ("contractions", "tc_sweep_suite_s"),
+    ("contractions", "tc_sweep_rank_jax_s"),
     ("einsum_paths", "tc_chain_suite_s"),
     ("einsum_paths", "tc_chain_rank_numpy_s"),
     ("einsum_paths", "tc_chain_rank_jax_s"),
+)
+
+#: (suite, jax metric, numpy metric) pairs checked WITHIN one artifact:
+#: a jax path slower than its numpy counterpart is a regression of the
+#: fused engine and warns on every PR
+BACKEND_RATIOS = (
+    ("batched_sweep", "sweep64_jax_cached_s", "sweep64_numpy_cached_s"),
+    ("contractions", "tc_rank64_rank_jax_s", "tc_rank64_rank_numpy_s"),
+    ("contractions", "tc_sweep_rank_jax_s", "tc_sweep_rank_numpy_s"),
+    ("einsum_paths", "tc_chain_rank_jax_s", "tc_chain_rank_numpy_s"),
 )
 
 
@@ -60,16 +79,43 @@ def compare(prev: dict, curr: dict, threshold: float) -> int:
     return flagged
 
 
+def check_backend_ratios(curr: dict) -> int:
+    """Warn on jax-slower-than-numpy inversions in ONE artifact."""
+    flagged = 0
+    for suite, jax_name, numpy_name in BACKEND_RATIOS:
+        t_jax = _metric(curr, suite, jax_name)
+        t_np = _metric(curr, suite, numpy_name)
+        if t_jax is None or t_np is None or t_np <= 0:
+            print(f"  {suite}.{jax_name} vs {numpy_name}: not comparable "
+                  f"(jax={t_jax!r} numpy={t_np!r})")
+            continue
+        ratio = t_jax / t_np
+        if ratio > 1.0:
+            flagged += 1
+            print(f"::warning title=jax backend slower than numpy::"
+                  f"{suite}.{jax_name} = {t_jax * 1e3:.2f}ms > "
+                  f"{suite}.{numpy_name} = {t_np * 1e3:.2f}ms "
+                  f"({ratio:.2f}x) — the fused jax path should win")
+        print(f"  {suite}.{jax_name}: {t_jax * 1e3:.2f}ms vs "
+              f"{numpy_name}: {t_np * 1e3:.2f}ms ({ratio:.2f}x)")
+    return flagged
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("previous", help="previous BENCH_smoke.json")
+    ap.add_argument("previous",
+                    help="previous BENCH_smoke.json ('-' when none exists: "
+                         "only the current artifact's backend ratios are "
+                         "checked)")
     ap.add_argument("current", help="current BENCH_smoke.json")
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="warn when metric grows by more than this factor")
     args = ap.parse_args()
     try:
-        with open(args.previous) as f:
-            prev = json.load(f)
+        prev = None
+        if args.previous != "-":
+            with open(args.previous) as f:
+                prev = json.load(f)
         with open(args.current) as f:
             curr = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
@@ -78,8 +124,14 @@ def main() -> None:
         print(f"::warning title=smoke comparison skipped::"
               f"cannot read artifacts: {e}")
         return
-    print(f"smoke comparison (warn beyond {args.threshold}x):")
-    flagged = compare(prev, curr, args.threshold)
+    flagged = 0
+    if prev is not None:
+        print(f"smoke comparison (warn beyond {args.threshold}x):")
+        flagged += compare(prev, curr, args.threshold)
+    else:
+        print("no previous artifact; cross-commit comparison skipped")
+    print("backend ratios (jax must not be slower than numpy):")
+    flagged += check_backend_ratios(curr)
     print(f"{flagged} regression(s) flagged" if flagged
           else "no regressions flagged")
 

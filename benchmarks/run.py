@@ -83,6 +83,10 @@ def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated suite filter (a multi-suite "
+                         "--only); combines with --smoke, so the fast lane "
+                         "can time each smoke suite independently")
     ap.add_argument("--smoke", action="store_true",
                     help="the CI fast lane: tiny sizes, synthetic models "
                          "(batched_sweep) + deduplicated real contraction "
@@ -93,14 +97,22 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         common.set_smoke(True)
-    if args.only and args.only not in SUITES:
-        raise SystemExit(f"unknown suite {args.only!r}; "
+    if args.only and args.suites:
+        raise SystemExit("pass --only or --suites, not both")
+    selected = None
+    if args.only:
+        selected = [args.only]
+    elif args.suites:
+        selected = [s.strip() for s in args.suites.split(",") if s.strip()]
+    unknown = [s for s in selected or [] if s not in SUITES]
+    if unknown:
+        raise SystemExit(f"unknown suite(s) {', '.join(unknown)}; "
                          f"choose from: {', '.join(SUITES)}")
     names = [n for n in SUITES
-             if (not args.only or n == args.only)
+             if (selected is None or n in selected)
              and (not args.smoke or n in SMOKE_SUITES)]
     if not names:
-        raise SystemExit(f"no suites selected ({args.only!r} is not in the "
+        raise SystemExit(f"no suites selected ({selected!r} is not in the "
                          f"smoke lane: {', '.join(SMOKE_SUITES)})")
     results = {name: _run_suite(name, *SUITES[name], smoke=args.smoke)
                for name in names}

@@ -25,7 +25,7 @@ import itertools
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -399,7 +399,7 @@ def predict_contraction(alg: ContractionAlgorithm,
 
 
 def rank_contraction_algorithms(spec: ContractionSpec,
-                                sizes: Mapping[str, int], *,
+                                sizes: Optional[Mapping[str, int]] = None, *,
                                 algorithms: Optional[Sequence[
                                     ContractionAlgorithm]] = None,
                                 repetitions: Optional[int] = None,
@@ -407,29 +407,60 @@ def rank_contraction_algorithms(spec: ContractionSpec,
                                 batched: bool = True,
                                 backend: Optional[str] = None,
                                 suite=None,
-                                ) -> List[Tuple[ContractionAlgorithm, float]]:
+                                cache=None,
+                                sizes_grid: Optional[Sequence[
+                                    Mapping[str, int]]] = None,
+                                ) -> Union[
+                                    List[Tuple[ContractionAlgorithm, float]],
+                                    List[List[Tuple[ContractionAlgorithm,
+                                                    float]]]]:
     """Predict every algorithm and sort ascending by predicted runtime.
 
     By default this runs on :class:`repro.tc.ContractionPredictor`: the
     candidate set (including batched-kernel algorithms when ``algorithms``
     is not given) shares one deduplicated micro-benchmark suite and is
     predicted through the batched :class:`PredictionEngine`
-    (``backend="numpy"|"jax"``; pass ``suite=`` to share measurements
-    across rankings).  ``batched=False`` keeps the original per-algorithm
+    (``backend="numpy"|"jax"``; pass ``suite=``/``cache=`` to share
+    measurements and compiled batches across rankings).  ``batched=False`` keeps the original per-algorithm
     path — one independent micro-benchmark per candidate — as the
     equivalence oracle.
+
+    Size-sweep mode: pass ``sizes_grid=`` (a sequence of size mappings)
+    instead of ``sizes`` to rank the candidate set at every size point
+    from ONE shared suite — returns one ranked list per size point, and
+    only the genuinely new (equation, shapes, cache-class) keys are
+    measured (see :func:`repro.tc.rank_contraction_sweep`, which also
+    exposes the shared suite and per-point predictors).
     """
+    if sizes_grid is not None:
+        if sizes is not None:
+            raise ValueError("pass sizes= or sizes_grid=, not both")
+        if not batched:
+            raise ValueError("sizes_grid= runs on the batched predictor; "
+                             "the scalar oracle (batched=False) has no "
+                             "size-sweep mode")
+        from ..tc.predictor import rank_contraction_sweep  # lazy: tc on core
+        sweep = rank_contraction_sweep(
+            spec, sizes_grid, stat=stat, backend=backend or "numpy",
+            algorithms=list(algorithms) if algorithms is not None else None,
+            repetitions=repetitions, suite=suite, cache=cache)
+        return [[(r.algorithm, getattr(r.runtime, stat)) for r in ranking]
+                for ranking in sweep.rankings]
+    if sizes is None:
+        raise ValueError("sizes is required (or pass sizes_grid= for the "
+                         "size-sweep mode)")
     if batched:
         from ..tc import ContractionPredictor  # lazy: tc builds on this module
         pred = ContractionPredictor(
             spec, sizes,
             algorithms=list(algorithms) if algorithms is not None else None,
-            repetitions=repetitions, suite=suite)
+            repetitions=repetitions, suite=suite, cache=cache)
         ranked = pred.rank(stat=stat, backend=backend or "numpy")
         return [(r.algorithm, getattr(r.runtime, stat)) for r in ranked]
-    if backend is not None or suite is not None:
-        raise ValueError("backend=/suite= apply to the batched predictor; "
-                         "the scalar oracle (batched=False) has neither")
+    if backend is not None or suite is not None or cache is not None:
+        raise ValueError("backend=/suite=/cache= apply to the batched "
+                         "predictor; the scalar oracle (batched=False) has "
+                         "none of them")
     algs = list(algorithms) if algorithms is not None else \
         generate_algorithms(spec)
     reps = 5 if repetitions is None else repetitions

@@ -177,7 +177,7 @@ class CaseModel:
                 # keep the numpy path's out-of-domain error semantics; the
                 # jitted program itself always clamps
                 self.piece_indices(pts, extrapolate=False)
-            return _jax_case_eval(pts, self._jax_tensors(),
+            return _jax_case_eval(pts, self.padded_tensors(),
                                   mask_degenerate=False)
         idx = self.piece_indices(pts, extrapolate=extrapolate)
         out = np.empty((pts.shape[0], len(STATS)), dtype=np.float64)
@@ -187,14 +187,20 @@ class CaseModel:
                 out[rows] = piece.estimate_batch(pts[rows])
         return out
 
-    def _jax_tensors(self):
+    def padded_tensors(self):
         """Per-piece flattened polynomials padded to one (P, M, ·) tensor.
 
-        Pieces with fewer monomial rows are zero-padded (exponent 0, scale
-        1, coefficient 0 — an exact no-op row), so one gather + einsum
-        serves the whole case.  Rebuilt whenever the piece list changes
-        (compared by identity: ``pieces`` is a public mutable list, and a
-        replaced piece must not serve stale tensors).
+        Returns ``(lo (P, d), hi (P, d), exps (P, M, d), scl (P, M, d),
+        cof (P, M, S))`` — the case's whole piecewise model as dense
+        tensors.  Pieces with fewer monomial rows are zero-padded
+        (exponent 0, scale 1, coefficient 0 — an exact no-op row), so one
+        gather + einsum serves the whole case; the prediction engine pads
+        these further across (kernel, case) groups into its fused
+        one-dispatch program.  Memoized, and rebuilt whenever the piece
+        list changes (compared by identity: ``pieces`` is a public
+        mutable list, and a replaced piece must not serve stale tensors);
+        ``modelgen`` emits them eagerly via :meth:`PerformanceModel.
+        finalize` so first predictions don't pay the derivation.
         """
         if not self.pieces:
             raise KeyError("empty case model")
@@ -229,6 +235,17 @@ class PerformanceModel:
 
     def add_piece(self, case: Case, piece: Piece) -> None:
         self.cases.setdefault(tuple(case), CaseModel()).pieces.append(piece)
+
+    def finalize(self) -> "PerformanceModel":
+        """Emit every case's padded tensors eagerly (returns ``self``).
+
+        ``modelgen`` calls this after fitting, so the dense per-case
+        tensors the fused prediction engine gathers from are part of the
+        generated artifact rather than re-derived on first predict."""
+        for cm in self.cases.values():
+            if cm.pieces:
+                cm.padded_tensors()
+        return self
 
     def estimate(self, case: Case, sizes: Sequence[int],
                  *, extrapolate: bool = True) -> Dict[str, float]:
@@ -272,7 +289,7 @@ class PerformanceModel:
         if backend == "jax":
             if not extrapolate:
                 cm.piece_indices(pts[live], extrapolate=False)
-            return _jax_case_eval(pts, cm._jax_tensors(),
+            return _jax_case_eval(pts, cm.padded_tensors(),
                                   mask_degenerate=True)
         out = np.zeros((pts.shape[0], len(STATS)), dtype=np.float64)
         out[live] = cm.estimate_batch(pts[live], extrapolate=extrapolate)
@@ -335,6 +352,13 @@ class ModelSet:
 
     def add(self, model: PerformanceModel) -> None:
         self.models[model.kernel] = model
+
+    def finalize(self) -> "ModelSet":
+        """:meth:`PerformanceModel.finalize` every model (returns
+        ``self``): all padded case tensors emitted up front."""
+        for model in self.models.values():
+            model.finalize()
+        return self
 
     def estimate(self, kernel: str, case: Case,
                  sizes: Sequence[int]) -> Dict[str, float]:

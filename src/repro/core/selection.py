@@ -188,11 +188,14 @@ def _resolve_chain_predictor(chain, sizes, repetitions, predictor):
     return predictor
 
 
-def rank_einsum_paths(chain, sizes: Mapping[str, int], *,
+def rank_einsum_paths(chain, sizes: Optional[Mapping[str, int]] = None, *,
                       stat: str = "med",
                       backend: Optional[str] = None,
                       repetitions: Optional[int] = None,
-                      predictor=None):
+                      predictor=None,
+                      sizes_grid: Optional[Sequence[
+                          Mapping[str, int]]] = None,
+                      suite=None, cache=None):
     """Rank every pairwise contraction path of an N-operand einsum.
 
     The chain counterpart of :func:`rank_algorithms`: all candidate paths
@@ -205,7 +208,33 @@ def rank_einsum_paths(chain, sizes: Mapping[str, int], *,
     to reuse measurements and compiled batches across calls; the
     step-by-step per-algorithm oracle remains available on the predictor
     as :meth:`~repro.tc.ChainPredictor.rank_paths_oracle`.
+
+    Size-sweep mode: pass ``sizes_grid=`` (a sequence of size mappings)
+    instead of ``sizes`` to rank every path at every size point from ONE
+    shared suite — returns one fastest-first ranking per size point; only
+    the genuinely new micro-benchmark keys are measured.  ``suite=`` /
+    ``cache=`` (sweep mode only — the single-size mode shares state via
+    ``predictor=``) extend a suite that already served other rankings
+    (see :func:`repro.tc.rank_einsum_sweep`, which also exposes the
+    shared suite and per-point predictors).
     """
+    if sizes_grid is not None:
+        if sizes is not None or predictor is not None:
+            raise ValueError("sizes_grid= replaces sizes= and builds its "
+                             "own per-point predictors; pass one mode or "
+                             "the other")
+        from ..tc.chains import rank_einsum_sweep  # lazy: tc needs core
+        return list(rank_einsum_sweep(chain, sizes_grid, stat=stat,
+                                      backend=backend or "numpy",
+                                      repetitions=repetitions,
+                                      suite=suite, cache=cache).rankings)
+    if suite is not None or cache is not None:
+        raise ValueError("suite=/cache= apply to the sizes_grid= sweep "
+                         "mode; the single-size path shares state via "
+                         "predictor=")
+    if sizes is None:
+        raise ValueError("sizes is required (or pass sizes_grid= for the "
+                         "size-sweep mode)")
     pred = _resolve_chain_predictor(chain, sizes, repetitions, predictor)
     return pred.rank_paths(stat=stat, backend=backend or "numpy")
 

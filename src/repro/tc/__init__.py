@@ -13,15 +13,17 @@ cache-state propagation between steps (:mod:`~repro.tc.chains`).
 See ``docs/contraction-prediction.md`` for the full walkthrough.
 """
 
-from .chains import (MAX_OPERANDS, ChainPath, ChainPredictor, ChainSpec,
-                     ChainStep, RankedChain, compose_chain_runtime,
+from .chains import (MAX_OPERANDS, ChainPath, ChainPredictor, ChainSizeSweep,
+                     ChainSpec, ChainStep, RankedChain, compose_chain_runtime,
                      execute_chain, execute_chain_reference,
-                     execute_path_reference, validate_paths)
+                     execute_path_reference, rank_einsum_sweep,
+                     validate_paths)
 from .kernels import (BATCH_SUFFIX, BATCHABLE_KERNELS, base_kernel,
                       generate_algorithms, generate_batched_algorithms,
                       is_batched_kernel, kernel_batch_dims, slice_call_bytes,
                       validate_algorithms)
-from .predictor import ContractionPredictor, RankedContraction
+from .predictor import (ContractionPredictor, ContractionSizeSweep,
+                        RankedContraction, rank_contraction_sweep)
 from .suite import (COLD, WARM, MicroBenchmark, MicroBenchmarkKey,
                     MicroBenchmarkSuite, benchmark_key, canonical_equation)
 
@@ -30,10 +32,12 @@ __all__ = [
     "generate_algorithms", "generate_batched_algorithms",
     "is_batched_kernel", "kernel_batch_dims", "slice_call_bytes",
     "validate_algorithms",
-    "ContractionPredictor", "RankedContraction",
+    "ContractionPredictor", "ContractionSizeSweep", "RankedContraction",
+    "rank_contraction_sweep",
     "COLD", "WARM", "MicroBenchmark", "MicroBenchmarkKey",
     "MicroBenchmarkSuite", "benchmark_key", "canonical_equation",
-    "MAX_OPERANDS", "ChainPath", "ChainPredictor", "ChainSpec", "ChainStep",
-    "RankedChain", "compose_chain_runtime", "execute_chain",
-    "execute_chain_reference", "execute_path_reference", "validate_paths",
+    "MAX_OPERANDS", "ChainPath", "ChainPredictor", "ChainSizeSweep",
+    "ChainSpec", "ChainStep", "RankedChain", "compose_chain_runtime",
+    "execute_chain", "execute_chain_reference", "execute_path_reference",
+    "rank_einsum_sweep", "validate_paths",
 ]

@@ -46,8 +46,8 @@ from ..core.contractions import _ITEM, ContractionSpec, execute
 from ..core.predict import TraceCache
 from ..core.sampler import Stats
 from .kernels import base_kernel, generate_algorithms
-from .predictor import ContractionPredictor, RankedContraction
-from .suite import COLD, WARM, MicroBenchmarkSuite
+from .predictor import ContractionPredictor, RankedContraction, SizeSweep
+from .suite import COLD, WARM, MicroBenchmarkSuite, resolve_suite
 
 #: largest supported einsum-chain operand count (path count grows as the
 #: double factorial (2N-3)!!: 3, 15, 105 for N = 3, 4, 5)
@@ -400,16 +400,7 @@ class ChainPredictor:
                 f"no candidate paths for {self.chain.einsum_expr()} "
                 f"(memory_limit_bytes={memory_limit_bytes})")
         self.paths = candidates
-        if suite is not None:
-            if repetitions is not None and repetitions != suite.repetitions:
-                raise ValueError(
-                    f"repetitions={repetitions} conflicts with the "
-                    f"supplied suite's repetitions={suite.repetitions}; "
-                    f"pass one or the other")
-            self.suite = suite
-        else:
-            self.suite = MicroBenchmarkSuite(
-                repetitions=5 if repetitions is None else repetitions)
+        self.suite = resolve_suite(suite, repetitions)
         self.cache = cache if cache is not None else TraceCache()
         self._predictors: Dict[Tuple, ContractionPredictor] = {}
 
@@ -523,3 +514,73 @@ class ChainPredictor:
         "merely a fraction of a contraction's runtime", lifted to whole
         einsum paths."""
         return self.suite.cost_fraction(measured_seconds)
+
+
+# ------------------------------------------------------- size-sweep mode --
+
+@dataclass(frozen=True)
+class ChainSizeSweep(SizeSweep):
+    """An einsum's contraction paths ranked across a grid of sizes.
+
+    Produced by :func:`rank_einsum_sweep`; ``rankings`` holds
+    :class:`RankedChain` lists, one per size point — every size point's
+    steps were predicted from the ONE shared suite/cache, so a new size
+    point only measures the (equation, shapes, cache-class) keys no
+    earlier point (or prior single-size ranking sharing the same suite)
+    already covered.  Shared members (``winners``, ``n_benchmarks``,
+    ``cost_fraction``) come from :class:`~repro.tc.predictor.SizeSweep`.
+    """
+
+    chain: ChainSpec
+    predictors: Tuple[ChainPredictor, ...]
+
+
+def rank_einsum_sweep(chain: Union[ChainSpec, str],
+                      sizes_grid: Sequence[Mapping[str, int]], *,
+                      stat: str = "med", backend: str = "numpy",
+                      suite: Optional[MicroBenchmarkSuite] = None,
+                      cache: Optional[TraceCache] = None,
+                      repetitions: Optional[int] = None,
+                      include_batched: bool = True,
+                      kernels: Optional[Sequence[str]] = None,
+                      max_loop_perms: int = 24,
+                      memory_limit_bytes: Optional[int] = None,
+                      ) -> ChainSizeSweep:
+    """Rank every contraction path at every size point from ONE suite.
+
+    The chain-level size-sweep autotuning mode: one
+    :class:`ChainPredictor` per size point, all sharing a single
+    :class:`~repro.tc.suite.MicroBenchmarkSuite` and
+    :class:`~repro.core.predict.TraceCache` (pass ``suite=``/``cache=``
+    to extend a suite that already served single-size rankings).  Steps
+    whose kernel signatures are unchanged across sizes — canonical
+    relabeling included — re-predict from existing measurements; only
+    the genuinely new keys are measured.  ``memory_limit_bytes`` prunes
+    per size point (an intermediate may be affordable at one size and
+    not another); a point where NO path survives the limit fails the
+    sweep with an error naming that point — drop it from the grid (or
+    raise the limit) to rank the rest.  The remaining keywords bound
+    the per-step candidate sets exactly as on :class:`ChainPredictor`.
+    """
+    spec = ChainSpec.parse(chain)
+    grid = [dict(s) for s in sizes_grid]
+    if not grid:
+        raise ValueError("sizes_grid must name at least one size point")
+    suite = resolve_suite(suite, repetitions)
+    cache = cache if cache is not None else TraceCache()
+    predictors, rankings = [], []
+    for sizes in grid:
+        try:
+            pred = ChainPredictor(spec, sizes, suite=suite, cache=cache,
+                                  include_batched=include_batched,
+                                  kernels=kernels,
+                                  max_loop_perms=max_loop_perms,
+                                  memory_limit_bytes=memory_limit_bytes)
+        except ValueError as e:
+            raise ValueError(f"size point {sizes}: {e}") from None
+        rankings.append(tuple(pred.rank_paths(stat=stat, backend=backend)))
+        predictors.append(pred)
+    return ChainSizeSweep(chain=spec, sizes_grid=tuple(grid),
+                          rankings=tuple(rankings),
+                          predictors=tuple(predictors),
+                          suite=suite, cache=cache)

@@ -49,7 +49,8 @@ from ..core.model import ModelSet, PerformanceModel, Piece
 from ..core.predict import KernelCall, PredictionEngine, TraceCache
 from ..core.sampler import STATS, Stats
 from .kernels import generate_algorithms
-from .suite import MicroBenchmark, MicroBenchmarkKey, MicroBenchmarkSuite
+from .suite import (MicroBenchmark, MicroBenchmarkKey, MicroBenchmarkSuite,
+                    resolve_suite)
 
 #: domain of the synthetic per-signature models: any positive loop count
 _N_DOMAIN = Domain((0,), (10 ** 18,))
@@ -134,18 +135,7 @@ class ContractionPredictor:
         if not self.algorithms:
             raise ValueError(f"no candidate algorithms for "
                              f"{self.spec.einsum_expr()}")
-        if suite is not None:
-            # the suite owns the measurement protocol; a conflicting
-            # repetition count must not be silently ignored
-            if repetitions is not None and repetitions != suite.repetitions:
-                raise ValueError(
-                    f"repetitions={repetitions} conflicts with the supplied "
-                    f"suite's repetitions={suite.repetitions}; pass one or "
-                    f"the other")
-            self.suite = suite
-        else:
-            self.suite = MicroBenchmarkSuite(
-                repetitions=5 if repetitions is None else repetitions)
+        self.suite = resolve_suite(suite, repetitions)
         self.cache = cache if cache is not None else TraceCache()
         self._engines: Dict[str, PredictionEngine] = {}
         self._models: Optional[ModelSet] = None
@@ -174,7 +164,9 @@ class ContractionPredictor:
                 model.add_piece(case, _signature_piece(mb))
             seqs.append((KernelCall(kernel=alg.kernel, case=case,
                                     sizes=(alg.n_iterations(self.sizes),)),))
-        self._models = models
+        # emit the padded case tensors now, like modelgen does: the first
+        # jax-backend rank should compile + dispatch, not derive tensors
+        self._models = models.finalize()
         self._benchmarks = benchmarks
         self._call_seqs = seqs
 
@@ -250,3 +242,99 @@ class ContractionPredictor:
         "merely a fraction of a contraction's runtime" metric)."""
         self.prepare()
         return self.suite.cost_fraction(measured_seconds)
+
+
+# ------------------------------------------------------- size-sweep mode --
+
+@dataclass(frozen=True)
+class SizeSweep:
+    """Shared shape of a size-sweep result (contraction or chain level).
+
+    ``rankings[i]`` is the full fastest-first ranking at
+    ``sizes_grid[i]``; every point was predicted from the ONE shared
+    :attr:`suite` / :attr:`cache`, so a new size point re-predicts from
+    existing measurements wherever its (equation, shapes, cache-class)
+    keys are unchanged and only the genuinely new keys are measured.
+    """
+
+    sizes_grid: Tuple[Dict[str, int], ...]
+    rankings: Tuple[Tuple, ...]
+    suite: MicroBenchmarkSuite
+    cache: TraceCache
+
+    @property
+    def winners(self) -> List:
+        """The fastest-predicted candidate at each size point."""
+        return [ranking[0] for ranking in self.rankings]
+
+    @property
+    def n_benchmarks(self) -> int:
+        """Distinct micro-benchmarks measured across ALL size points."""
+        return self.suite.n_benchmarks
+
+    def cost_fraction(self, measured_seconds: float) -> float:
+        """Total suite cost over one measured execution — the whole
+        sweep's prediction cost as a fraction of a single run."""
+        return self.suite.cost_fraction(measured_seconds)
+
+
+@dataclass(frozen=True)
+class ContractionSizeSweep(SizeSweep):
+    """One contraction's candidate set ranked across a grid of sizes.
+
+    Produced by :func:`rank_contraction_sweep`; ``rankings`` holds
+    :class:`RankedContraction` lists, one per size point, and the
+    per-signature models are size-parametric (``t(n) = first +
+    per_call * n`` over the loop count) — see :class:`SizeSweep` for the
+    shared suite/cache semantics.
+    """
+
+    spec: ContractionSpec
+    predictors: Tuple[ContractionPredictor, ...]
+
+
+def rank_contraction_sweep(spec: Union[ContractionSpec, str],
+                           sizes_grid: Sequence[Mapping[str, int]], *,
+                           stat: str = "med", backend: str = "numpy",
+                           algorithms: Optional[
+                               Sequence[ContractionAlgorithm]] = None,
+                           include_batched: bool = True,
+                           repetitions: Optional[int] = None,
+                           suite: Optional[MicroBenchmarkSuite] = None,
+                           cache: Optional[TraceCache] = None,
+                           arrival: Optional[Mapping[str, str]] = None,
+                           ) -> ContractionSizeSweep:
+    """Rank every candidate algorithm at every size point from ONE suite.
+
+    The size-sweep autotuning mode: one :class:`ContractionPredictor`
+    per size point, all sharing a single
+    :class:`~repro.tc.suite.MicroBenchmarkSuite` and
+    :class:`~repro.core.predict.TraceCache` (pass ``suite=``/``cache=``
+    to also share them with prior single-size rankings).  Size points
+    whose candidates map to already-measured (equation, shapes,
+    cache-class) keys re-predict without any new measurement — e.g.
+    sweeping a loop-only dimension leaves every loop-nest candidate's
+    kernel shapes untouched — so the whole sweep's measurement cost is
+    bounded by the number of *distinct* keys, not by
+    ``len(sizes_grid) * len(algorithms)``.
+    """
+    spec = spec if isinstance(spec, ContractionSpec) else \
+        ContractionSpec.parse(spec)
+    grid = [dict(s) for s in sizes_grid]
+    if not grid:
+        raise ValueError("sizes_grid must name at least one size point")
+    suite = resolve_suite(suite, repetitions)
+    cache = cache if cache is not None else TraceCache()
+    algs = list(algorithms) if algorithms is not None else \
+        generate_algorithms(spec, include_batched=include_batched)
+    predictors, rankings = [], []
+    for sizes in grid:
+        pred = ContractionPredictor(spec, sizes, algorithms=algs,
+                                    suite=suite, cache=cache,
+                                    arrival=arrival)
+        rankings.append(tuple(pred.rank(stat=stat, backend=backend)))
+        predictors.append(pred)
+    return ContractionSizeSweep(spec=spec, sizes_grid=tuple(grid),
+                                rankings=tuple(rankings),
+                                predictors=tuple(predictors),
+                                suite=suite, cache=cache)

@@ -125,6 +125,26 @@ class MicroBenchmark:
 MeasureFn = Callable[[MicroBenchmarkKey, int], Tuple[Stats, float]]
 
 
+def resolve_suite(suite: Optional["MicroBenchmarkSuite"],
+                  repetitions: Optional[int]) -> "MicroBenchmarkSuite":
+    """The one implementation of the suite-vs-repetitions contract.
+
+    A supplied suite owns the measurement protocol, so a conflicting
+    ``repetitions`` raises instead of being silently ignored; without a
+    suite, a fresh one is built (default 5 repetitions).  Every
+    predictor and sweep entry point resolves its arguments here.
+    """
+    if suite is not None:
+        if repetitions is not None and repetitions != suite.repetitions:
+            raise ValueError(
+                f"repetitions={repetitions} conflicts with the supplied "
+                f"suite's repetitions={suite.repetitions}; pass one or "
+                f"the other")
+        return suite
+    return MicroBenchmarkSuite(
+        repetitions=5 if repetitions is None else repetitions)
+
+
 class MicroBenchmarkSuite:
     """Runs each distinct micro-benchmark once and shares the result.
 
@@ -195,6 +215,17 @@ class MicroBenchmarkSuite:
     def cost_fraction(self, measured_seconds: float) -> float:
         """Suite cost as a fraction of a measured contraction runtime."""
         return self.cost_seconds / measured_seconds
+
+    def counters(self) -> Dict[str, float]:
+        """Snapshot of the suite's running totals.
+
+        Diff two snapshots to see what one phase genuinely added — e.g.
+        how many *new* benchmarks (and how much wall-clock) the second
+        size point of a sweep cost on top of the first."""
+        return {"requests": self.requests,
+                "n_benchmarks": self.n_benchmarks,
+                "cost_seconds": self.cost_seconds,
+                "oracle_cost_seconds": self.oracle_cost_seconds}
 
     # ----------------------------------------------------------- internal --
     def _run(self, key: MicroBenchmarkKey,

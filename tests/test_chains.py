@@ -9,7 +9,7 @@ from repro.core.selection import rank_einsum_paths, select_einsum_path
 from repro.tc import (COLD, WARM, ChainPredictor, ChainSpec,
                       MicroBenchmarkSuite, execute_chain,
                       execute_chain_reference, execute_path_reference,
-                      validate_paths)
+                      rank_einsum_sweep, validate_paths)
 
 RNG = np.random.default_rng(11)
 
@@ -227,3 +227,59 @@ def test_repetitions_suite_conflict_raises():
     with pytest.raises(ValueError):
         ChainPredictor("ij,jk,kl->il", {i: 8 for i in "ijkl"},
                        suite=fake_suite(repetitions=4), repetitions=3)
+
+
+# ------------------------------------------------------------ size sweep --
+
+CHAIN_SWEEP_GRID = [{i: 4 for i in "ijkl"}, {i: 6 for i in "ijkl"},
+                    {i: 8 for i in "ijkl"}]
+
+
+def test_chain_size_sweep_matches_independent_predictors():
+    """Every size point of a shared-suite chain sweep ranks exactly like
+    a fresh standalone ChainPredictor at that size."""
+    sweep = rank_einsum_sweep("ij,jk,kl->il", CHAIN_SWEEP_GRID,
+                              suite=fake_suite())
+    assert len(sweep.rankings) == len(CHAIN_SWEEP_GRID)
+    assert sweep.n_benchmarks < sweep.suite.requests   # cross-point dedup
+    for sizes, ranking in zip(CHAIN_SWEEP_GRID, sweep.rankings):
+        solo = ChainPredictor("ij,jk,kl->il", sizes,
+                              suite=fake_suite()).rank_paths()
+        assert [r.name for r in ranking] == [r.name for r in solo]
+        assert [r.runtime for r in ranking] == [r.runtime for r in solo]
+    assert [w.name for w in sweep.winners] == \
+        [r[0].name for r in sweep.rankings]
+
+
+def test_chain_size_sweep_core_entry_point_and_errors():
+    suite = fake_suite()
+    per_point = rank_einsum_paths("ij,jk,kl->il",
+                                  sizes_grid=CHAIN_SWEEP_GRID,
+                                  suite=suite)
+    assert len(per_point) == len(CHAIN_SWEEP_GRID)
+    for ranking in per_point:
+        assert ranking[0].runtime.med <= ranking[-1].runtime.med
+    # the core entry extended the SHARED suite, no fresh measurements
+    sweep = rank_einsum_sweep("ij,jk,kl->il", CHAIN_SWEEP_GRID,
+                              suite=fake_suite())
+    assert suite.n_benchmarks == sweep.n_benchmarks
+    assert [r.name for r in per_point[0]] == \
+        [r.name for r in sweep.rankings[0]]
+    with pytest.raises(ValueError, match="mode"):
+        rank_einsum_paths("ij,jk,kl->il", CHAIN_SWEEP_GRID[0],
+                          sizes_grid=CHAIN_SWEEP_GRID)
+    with pytest.raises(ValueError, match="suite"):
+        rank_einsum_paths("ij,jk,kl->il", CHAIN_SWEEP_GRID[0],
+                          suite=fake_suite())
+    with pytest.raises(ValueError, match="sizes"):
+        rank_einsum_paths("ij,jk,kl->il")
+    with pytest.raises(ValueError, match="size point"):
+        rank_einsum_sweep("ij,jk,kl->il", [], suite=fake_suite())
+    with pytest.raises(ValueError, match="repetitions"):
+        rank_einsum_sweep("ij,jk,kl->il", CHAIN_SWEEP_GRID,
+                          suite=fake_suite(repetitions=4), repetitions=3)
+    # a size point where NO path survives the memory limit names itself
+    with pytest.raises(ValueError, match="size point"):
+        rank_einsum_sweep("ij,jk,kl->il",
+                          [CHAIN_SWEEP_GRID[0], {i: 64 for i in "ijkl"}],
+                          suite=fake_suite(), memory_limit_bytes=1)

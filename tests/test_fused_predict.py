@@ -1,0 +1,171 @@
+"""Tests for the fused one-dispatch prediction path.
+
+``PredictionEngine.predict_compiled`` evaluates a whole compiled batch —
+piece lookup, design matrices, per-group matmuls AND the config-wise
+scatter-add — as one fused program (a single jitted XLA dispatch on
+``backend="jax"``, one precomputed-scatter accumulate on ``"numpy"``).
+Three paths must agree: the fused path, the per-group reference path
+(:meth:`~repro.core.predict.PredictionEngine.predict_compiled_grouped`)
+and the scalar per-call oracle (:func:`~repro.core.predict.
+predict_runtime`) — to ~1e-8 across the full tracer catalog.  Padding
+is load-bearing: padded rows scatter into a dropped segment, so results
+must be BIT-stable under any re-padding.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks.common import catalog_synthetic_model_set
+from repro.core import (CompiledCalls, KernelCall, PredictionEngine,
+                        compile_calls, predict_runtime)
+from repro.core.sampler import STATS
+from repro.dla.tracers import ALL_TRACERS
+
+REL = 1e-8
+
+
+@pytest.fixture(scope="module")
+def models():
+    return catalog_synthetic_model_set()
+
+
+@pytest.fixture(scope="module")
+def catalog_seqs():
+    # the full tracer catalog at one (n, b): every kernel, degenerate
+    # tail calls included — deliberately UNEVEN group sizes, so the row
+    # padding is exercised on every group
+    return [tracer(264, 56) for tracer in ALL_TRACERS.values()]
+
+
+def _scalar_reference(seqs, models):
+    return np.array([[getattr(predict_runtime(seq, models), s)
+                      for s in STATS] for seq in seqs])
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_fused_matches_grouped_and_scalar_on_full_catalog(
+        models, catalog_seqs, backend):
+    eng = PredictionEngine(models, backend=backend)
+    compiled = compile_calls(catalog_seqs)
+    fused = eng.predict_compiled(compiled)
+    grouped = eng.predict_compiled_grouped(compiled)
+    ref = _scalar_reference(catalog_seqs, models)
+    np.testing.assert_allclose(fused, ref, rtol=REL, atol=0)
+    np.testing.assert_allclose(grouped, ref, rtol=REL, atol=0)
+    np.testing.assert_allclose(fused, grouped, rtol=REL, atol=0)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("pad", [1, 7, 64])
+def test_padding_rows_never_leak(models, catalog_seqs, backend, pad):
+    """Re-padding the row axis must not change a single bit: padding rows
+    evaluate to exact zeros and scatter into the dropped segment."""
+    eng = PredictionEngine(models, backend=backend)
+    base = eng.predict_compiled(compile_calls(catalog_seqs))
+    rows = max(g.sizes.shape[0]
+               for g in compile_calls(catalog_seqs).groups)
+    repadded = compile_calls(catalog_seqs, pad_rows_to=rows + pad)
+    np.testing.assert_array_equal(eng.predict_compiled(repadded), base)
+
+
+def test_fused_batch_structure(catalog_seqs):
+    compiled = compile_calls(catalog_seqs, pad_rows_to=None)
+    fused = compiled.fused
+    g = len(compiled.groups)
+    assert fused.sizes.shape[0] == g
+    assert fused.sizes.shape[1] == max(fused.rows)
+    assert fused.sizes.shape[2] == max(fused.dims)
+    assert fused.rows == tuple(grp.sizes.shape[0]
+                               for grp in compiled.groups)
+    assert fused.dims == tuple(grp.sizes.shape[1]
+                               for grp in compiled.groups)
+    # flat_config concatenates the per-group config indices in order
+    np.testing.assert_array_equal(
+        fused.flat_config,
+        np.concatenate([grp.config for grp in compiled.groups]))
+    assert fused.flat_config.shape == (compiled.n_calls,)
+    # segments: real rows carry their config, padding rows the dropped
+    # segment n_configs; padded dims of live rows are a benign 1.0
+    seg = fused.segments.reshape(g, -1)
+    for gi, grp in enumerate(compiled.groups):
+        k, d = grp.sizes.shape
+        np.testing.assert_array_equal(seg[gi, :k], grp.config)
+        assert np.all(seg[gi, k:] == compiled.n_configs)
+        assert np.all(fused.sizes[gi, k:] == 0.0)
+        assert np.all(fused.sizes[gi, :k, d:] == 1.0)
+
+
+def test_hand_built_compiled_derives_fused_lazily(models, catalog_seqs):
+    eager = compile_calls(catalog_seqs)
+    lazy = CompiledCalls(n_configs=eager.n_configs, groups=eager.groups)
+    assert lazy.fused is None
+    got = PredictionEngine(models).predict_compiled(lazy)
+    assert lazy.fused is not None          # derived + memoized on first use
+    np.testing.assert_array_equal(
+        got, PredictionEngine(models).predict_compiled(eager))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_empty_and_all_degenerate_batches(models, backend):
+    eng = PredictionEngine(models, backend=backend)
+    # configs with no calls at all predict all-zero statistics
+    out = eng.predict_batch([[], []])
+    assert out.shape == (2, len(STATS))
+    assert np.all(out == 0.0)
+    # an unmodeled case whose every call is degenerate needs no model;
+    # a live call to it still raises (scalar-path parity)
+    degen = [KernelCall("gemm", ("MISSING",), (0, 64, 64))]
+    assert np.all(eng.predict_batch([degen]) == 0.0)
+    with pytest.raises(KeyError):
+        eng.predict_batch(
+            [degen + [KernelCall("gemm", ("MISSING",), (64, 64, 64))]])
+
+
+def test_fused_model_tensors_track_model_mutation(models, catalog_seqs):
+    """A mutated case model must not serve stale fused tensors."""
+    eng = PredictionEngine(models)
+    compiled = compile_calls(catalog_seqs)
+    first = eng._fused_model_tensors(compiled)
+    assert eng._fused_model_tensors(compiled) is first      # memoized
+    model = models["gemm"]
+    case = next(iter(model.cases))
+    cm = model.cases[case]
+    piece = cm.pieces[0]
+    cm.pieces[0] = piece                    # same object: still cached
+    assert eng._fused_model_tensors(compiled) is first
+    import copy
+    cm.pieces[0] = copy.deepcopy(piece)     # replaced: tensors rebuilt
+    try:
+        assert eng._fused_model_tensors(compiled) is not first
+    finally:
+        cm.pieces[0] = piece
+
+
+def test_repadding_property_many_shapes(models):
+    """Vary group sizes and paddings; fused results must stay bit-stable
+    and padding must never leak into any config's totals."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    tracers = list(ALL_TRACERS.values())
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data())
+    def run(data):
+        k = data.draw(st.integers(min_value=1, max_value=4))
+        picks = data.draw(st.lists(
+            st.integers(min_value=0, max_value=len(tracers) - 1),
+            min_size=k, max_size=k))
+        b = data.draw(st.sampled_from([8, 24, 56, 120]))
+        pad = data.draw(st.integers(min_value=0, max_value=50))
+        seqs = [tracers[i](264, b) for i in picks]
+        eng = PredictionEngine(models)
+        base = eng.predict_compiled(compile_calls(seqs))
+        repadded = eng.predict_compiled(
+            compile_calls(seqs, pad_rows_to=pad))
+        np.testing.assert_array_equal(repadded, base)
+        ref = _scalar_reference(seqs, models)
+        np.testing.assert_allclose(base, ref, rtol=REL, atol=0)
+
+    run()

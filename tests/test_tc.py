@@ -11,7 +11,8 @@ from repro.core.sampler import STATS, Stats
 from repro.core.selection import select_contraction_algorithm
 from repro.tc import (COLD, WARM, ContractionPredictor, MicroBenchmarkSuite,
                       benchmark_key, canonical_equation, generate_algorithms,
-                      is_batched_kernel, kernel_batch_dims, slice_call_bytes,
+                      is_batched_kernel, kernel_batch_dims,
+                      rank_contraction_sweep, slice_call_bytes,
                       validate_algorithms)
 
 RNG = np.random.default_rng(7)
@@ -302,6 +303,81 @@ def test_prediction_cost_fraction():
     pred.prepare()
     frac = pred.prediction_cost_fraction(1.0)
     assert frac == pytest.approx(pred.suite.cost_seconds)
+
+
+# ------------------------------------------------------------ size sweep --
+
+SWEEP_GRID = [dict(b=2, i=8, j=8, k=8), dict(b=4, i=8, j=8, k=8),
+              dict(b=8, i=8, j=8, k=8)]
+
+
+def test_size_sweep_matches_independent_predictors():
+    """Every size point of a shared-suite sweep ranks exactly like a
+    fresh standalone predictor at that size (deterministic measure_fn:
+    shared measurements are bit-interchangeable)."""
+    sweep = rank_contraction_sweep("bij,bjk->bik", SWEEP_GRID,
+                                   suite=fake_suite())
+    assert len(sweep.rankings) == len(SWEEP_GRID)
+    for sizes, ranking in zip(SWEEP_GRID, sweep.rankings):
+        solo = ContractionPredictor("bij,bjk->bik", sizes,
+                                    suite=fake_suite()).rank()
+        assert [r.name for r in ranking] == [r.name for r in solo]
+        assert [r.runtime for r in ranking] == [r.runtime for r in solo]
+    assert [w.name for w in sweep.winners] == \
+        [r[0].name for r in sweep.rankings]
+
+
+def test_size_sweep_measures_only_new_keys():
+    """One shared suite across the grid: identical keys are measured
+    once, and sweeping a loop-only dimension (b with batched kernels
+    excluded: no kernel shape contains b) measures NOTHING new."""
+    suite = fake_suite()
+    sweep = rank_contraction_sweep("bij,bjk->bik", SWEEP_GRID, suite=suite)
+    assert suite.n_benchmarks < suite.requests
+    assert sweep.n_benchmarks == suite.n_benchmarks
+    loop_only = fake_suite()
+    rank_contraction_sweep("bij,bjk->bik", SWEEP_GRID[:1], suite=loop_only,
+                           include_batched=False)
+    first_point = loop_only.counters()
+    rank_contraction_sweep("bij,bjk->bik", SWEEP_GRID, suite=loop_only,
+                           include_batched=False)
+    assert loop_only.n_benchmarks == first_point["n_benchmarks"]
+    assert loop_only.cost_seconds == first_point["cost_seconds"]
+
+
+def test_size_sweep_core_entry_point_and_errors():
+    per_point = rank_contraction_algorithms("bij,bjk->bik",
+                                            sizes_grid=SWEEP_GRID,
+                                            suite=fake_suite())
+    assert len(per_point) == len(SWEEP_GRID)
+    sweep = rank_contraction_sweep("bij,bjk->bik", SWEEP_GRID,
+                                   suite=fake_suite())
+    for got, ranking in zip(per_point, sweep.rankings):
+        assert [a.name for a, _ in got] == [r.name for r in ranking]
+        assert [t for _, t in got] == [r.runtime.med for r in ranking]
+    # the shared TraceCache is reachable through the core entry too
+    from repro.core.predict import TraceCache
+    cache = TraceCache()
+    rank_contraction_algorithms("bij,bjk->bik", sizes_grid=SWEEP_GRID,
+                                suite=fake_suite(), cache=cache)
+    assert cache.misses > 0        # compiled batches built on the shared cache
+    with pytest.raises(ValueError, match="cache"):
+        rank_contraction_algorithms("bij,bjk->bik", SWEEP_GRID[0],
+                                    batched=False, cache=TraceCache())
+    with pytest.raises(ValueError, match="not both"):
+        rank_contraction_algorithms("bij,bjk->bik", SWEEP_GRID[0],
+                                    sizes_grid=SWEEP_GRID)
+    with pytest.raises(ValueError, match="batched"):
+        rank_contraction_algorithms("bij,bjk->bik", sizes_grid=SWEEP_GRID,
+                                    batched=False)
+    with pytest.raises(ValueError, match="sizes"):
+        rank_contraction_algorithms("bij,bjk->bik")
+    with pytest.raises(ValueError, match="size point"):
+        rank_contraction_sweep("bij,bjk->bik", [], suite=fake_suite())
+    with pytest.raises(ValueError, match="repetitions"):
+        rank_contraction_sweep("bij,bjk->bik", SWEEP_GRID,
+                               suite=fake_suite(repetitions=4),
+                               repetitions=3)
 
 
 # ---------------------------------------------- batched execution (slow) --
