@@ -1,0 +1,152 @@
+"""Benchmark: model-guided serving vs the FIFO baseline.
+
+The first benchmark where the predictor earns its keep *inside* the
+system it models: an open-loop load generator (Poisson arrivals, mixed
+prompt lengths) drives the continuous-batching :class:`ServeEngine` twice
+over one identical arrival trace — once under the
+:class:`~repro.serve.scheduler.FifoScheduler` baseline (blocking prefill,
+first-come-first-served: the pre-refactor behavior) and once under the
+:class:`~repro.serve.scheduler.ModelGuidedScheduler`, whose per-tick
+admit/defer/interleave decisions compare predicted completion-time deltas
+from a :class:`~repro.serve.scheduler.StepCostModel` measured once
+through a shared :class:`~repro.tc.session.PredictorSession`.
+
+Reported per policy: p50/p99 submit→finish latency, goodput (completed
+output tokens per wall-clock second), and the scheduler's own per-tick
+planning overhead.  Smoke mode emits the ``serve_*`` metrics CI tracks —
+``compare_smoke.py`` warns when the model-guided goodput falls below the
+FIFO baseline or the tick overhead leaves its sub-ms budget.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serve import (FifoScheduler, ModelGuidedScheduler, Request,
+                         ServeEngine)
+from repro.serve.engine import EngineStats
+from repro.tc import PredictorSession
+
+from .common import is_smoke
+
+#: tiny decoder the smoke lane serves (compiles in seconds on CPU)
+SMOKE_ARCH = dict(n_layers=2, d_model=64, d_ff=128, vocab=128)
+SLOTS = 3
+CTX = 64
+
+#: the open-loop workload: mixed prompt lengths, Poisson arrivals
+PROMPT_LENGTHS = (4, 16, 48)
+MEAN_INTERARRIVAL_S = 0.010
+MAX_NEW_TOKENS = 8
+
+
+def _config(smoke: bool):
+    cfg = reduced(get_config("deepseek-7b"), **SMOKE_ARCH)
+    if not smoke:
+        cfg = reduced(get_config("deepseek-7b"), n_layers=4, d_model=128,
+                      d_ff=256, vocab=256)
+    return cfg
+
+
+def make_trace(cfg, n: int, seed: int = 0) -> List[Request]:
+    """One fixed arrival trace: regenerate (same seed) per policy so both
+    schedulers see identical requests at identical arrival offsets."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for uid in range(n):
+        plen = int(rng.choice(PROMPT_LENGTHS))
+        prompt = rng.integers(1, cfg.vocab, size=plen).astype(np.int32)
+        reqs.append(Request(uid=uid, prompt=prompt,
+                            max_new_tokens=MAX_NEW_TOKENS, arrival_s=t))
+        t += float(rng.exponential(MEAN_INTERARRIVAL_S))
+    return reqs
+
+
+def serve_once(cfg, params, scheduler, n: int,
+               ) -> Tuple[EngineStats, float, float]:
+    """(stats, goodput tok/s, wall seconds) of one policy over the trace."""
+    eng = ServeEngine(cfg, params, batch_slots=SLOTS, ctx_len=CTX)
+    # compile the fused step outside the measured window
+    eng.run([Request(uid=-1, prompt=np.ones(4, dtype=np.int32),
+                     max_new_tokens=2)])
+    eng.stats = EngineStats()
+    reqs = make_trace(cfg, n)
+    t0 = time.perf_counter()
+    stats = eng.run(reqs, scheduler=scheduler)
+    wall = time.perf_counter() - t0
+    tokens = sum(len(r.out_tokens) for r in reqs)
+    assert all(r.done for r in reqs)
+    return stats, tokens / wall, wall
+
+
+def _bench(report: List[str], results: Dict[str, object], *,
+           smoke: bool) -> None:
+    import jax
+
+    cfg = _config(smoke)
+    n = 12 if smoke else 48
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    session = PredictorSession()
+    t0 = time.perf_counter()
+    model = session.step_cost_model(cfg, slots=SLOTS)
+    t_model = time.perf_counter() - t0
+
+    fifo_stats, fifo_goodput, fifo_wall = serve_once(
+        cfg, params, FifoScheduler(), n)
+    guided_stats, goodput, wall = serve_once(
+        cfg, params, ModelGuidedScheduler(model), n)
+
+    report.append(
+        f"serving {n} reqs (prompts {PROMPT_LENGTHS}, "
+        f"mean arrival {MEAN_INTERARRIVAL_S * 1e3:.0f}ms, "
+        f"slots={SLOTS}): step model {t_model:.2f}s "
+        f"({model.n_benchmarks} benchmarks)")
+    report.append(
+        f"  fifo  : goodput={fifo_goodput:7.1f} tok/s "
+        f"p50={fifo_stats.latency_ms(50):7.1f}ms "
+        f"p99={fifo_stats.latency_ms(99):7.1f}ms "
+        f"wall={fifo_wall:5.2f}s ticks={fifo_stats.ticks}")
+    report.append(
+        f"  guided: goodput={goodput:7.1f} tok/s "
+        f"p50={guided_stats.latency_ms(50):7.1f}ms "
+        f"p99={guided_stats.latency_ms(99):7.1f}ms "
+        f"wall={wall:5.2f}s ticks={guided_stats.ticks} "
+        f"tick_overhead={guided_stats.tick_overhead_ms:.3f}ms")
+    report.append(
+        f"  model-guided vs fifo: goodput {goodput / fifo_goodput:.2f}x, "
+        f"p99 {guided_stats.latency_ms(99) / fifo_stats.latency_ms(99):.2f}x")
+    results.update({
+        "serve_model_build_s": t_model,
+        "serve_fifo_goodput_tok_s": fifo_goodput,
+        "serve_fifo_p50_ms": fifo_stats.latency_ms(50),
+        "serve_fifo_p99_ms": fifo_stats.latency_ms(99),
+        "serve_goodput_tok_s": goodput,
+        "serve_p50_ms": guided_stats.latency_ms(50),
+        "serve_p99_ms": guided_stats.latency_ms(99),
+        "serve_tick_overhead_ms": guided_stats.tick_overhead_ms,
+        "serve_goodput_ratio": goodput / fifo_goodput,
+        "serve_p99_ratio": (guided_stats.latency_ms(99) /
+                            fifo_stats.latency_ms(99)),
+    })
+
+
+def run(report: List[str],
+        results: Optional[Dict[str, object]] = None) -> None:
+    _bench(report, results if results is not None else {},
+           smoke=is_smoke())
+
+
+def main() -> None:
+    report: List[str] = []
+    run(report)
+    print("\n".join(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,20 @@ TRACKED = (
     ("einsum_paths", "tc_chain_suite_s"),
     ("einsum_paths", "tc_chain_rank_numpy_s"),
     ("einsum_paths", "tc_chain_rank_jax_s"),
+    ("serving", "serve_p99_ms"),
+    ("serving", "serve_tick_overhead_ms"),
+    ("serving", "serve_goodput_tok_s"),
+)
+
+#: tracked metrics where HIGHER is better (the comparison ratio inverts:
+#: a drop below 1/threshold warns)
+HIGHER_BETTER = frozenset({("serving", "serve_goodput_tok_s")})
+
+#: (suite, guided metric, baseline metric) pairs checked WITHIN one
+#: artifact: the model-guided scheduler falling below its FIFO baseline
+#: means the predictions stopped paying for themselves
+SERVING_RATIOS = (
+    ("serving", "serve_goodput_tok_s", "serve_fifo_goodput_tok_s"),
 )
 
 #: (suite, jax metric, numpy metric) pairs checked WITHIN one artifact:
@@ -67,14 +81,18 @@ def compare(prev: dict, curr: dict, threshold: float) -> int:
             print(f"  {suite}.{name}: not comparable "
                   f"(old={old!r} new={new!r})")
             continue
-        ratio = new / old
-        line = (f"  {suite}.{name}: {old * 1e3:.2f}ms -> {new * 1e3:.2f}ms "
-                f"({ratio:.2f}x)")
+        # higher-is-better metrics regress when they SHRINK: invert the
+        # ratio so one threshold covers both directions
+        ratio = old / new if (suite, name) in HIGHER_BETTER and new > 0 \
+            else new / old
+        line = f"  {suite}.{name}: {old:.4g} -> {new:.4g} ({ratio:.2f}x)"
         if ratio > threshold:
             flagged += 1
+            direction = "dropped" if (suite, name) in HIGHER_BETTER \
+                else "slowed"
             print(f"::warning title=smoke perf regression::{suite}.{name} "
-                  f"slowed {ratio:.2f}x ({old * 1e3:.2f}ms -> "
-                  f"{new * 1e3:.2f}ms, threshold {threshold}x)")
+                  f"{direction} {ratio:.2f}x ({old:.4g} -> {new:.4g}, "
+                  f"threshold {threshold}x)")
         print(line)
     return flagged
 
@@ -98,6 +116,29 @@ def check_backend_ratios(curr: dict) -> int:
                   f"({ratio:.2f}x) — the fused jax path should win")
         print(f"  {suite}.{jax_name}: {t_jax * 1e3:.2f}ms vs "
               f"{numpy_name}: {t_np * 1e3:.2f}ms ({ratio:.2f}x)")
+    return flagged
+
+
+def check_serving_ratios(curr: dict) -> int:
+    """Warn when model-guided serving loses to its FIFO baseline."""
+    flagged = 0
+    for suite, guided_name, fifo_name in SERVING_RATIOS:
+        guided = _metric(curr, suite, guided_name)
+        fifo = _metric(curr, suite, fifo_name)
+        if guided is None or fifo is None or fifo <= 0:
+            print(f"  {suite}.{guided_name} vs {fifo_name}: not comparable "
+                  f"(guided={guided!r} fifo={fifo!r})")
+            continue
+        ratio = guided / fifo
+        if ratio < 1.0:
+            flagged += 1
+            print(f"::warning title=model-guided serving below FIFO::"
+                  f"{suite}.{guided_name} = {guided:.4g} < "
+                  f"{suite}.{fifo_name} = {fifo:.4g} ({ratio:.2f}x) — "
+                  f"the step-cost predictions stopped paying for "
+                  f"themselves")
+        print(f"  {suite}.{guided_name}: {guided:.4g} vs "
+              f"{fifo_name}: {fifo:.4g} ({ratio:.2f}x)")
     return flagged
 
 
@@ -132,6 +173,8 @@ def main() -> None:
         print("no previous artifact; cross-commit comparison skipped")
     print("backend ratios (jax must not be slower than numpy):")
     flagged += check_backend_ratios(curr)
+    print("serving ratios (model-guided must not lose to FIFO):")
+    flagged += check_serving_ratios(curr)
     print(f"{flagged} regression(s) flagged" if flagged
           else "no regressions flagged")
 

@@ -23,8 +23,8 @@ import traceback
 from . import (bench_algorithm_selection, bench_batched_sweep,
                bench_blocksize, bench_cache_effects, bench_contractions,
                bench_einsum_paths, bench_model_accuracy,
-               bench_prediction_accuracy, bench_roofline, bench_tile_tuner,
-               common)
+               bench_prediction_accuracy, bench_roofline, bench_serving,
+               bench_tile_tuner, common)
 
 SUITES = {
     "model_accuracy": (bench_model_accuracy,
@@ -43,16 +43,18 @@ SUITES = {
                      "paper Ch 6: contraction micro-benchmark prediction"),
     "einsum_paths": (bench_einsum_paths,
                      "beyond-paper: einsum-path (chain) prediction"),
+    "serving": (bench_serving,
+                "beyond-paper: model-guided serving vs FIFO baseline"),
     "tile_tuner": (bench_tile_tuner,
                    "beyond-paper: Pallas BlockSpec tile selection"),
     "roofline": (bench_roofline,
                  "deliverable (g): per-cell roofline table"),
 }
 
-#: the CI smoke lane: the measurement-free prediction-path probe plus the
+#: the CI smoke lane: the measurement-free prediction-path probe, the
 #: (cheap, deduplicated) contraction probes with their tc_rank64_* and
-#: tc_chain_* metrics
-SMOKE_SUITES = ("batched_sweep", "contractions", "einsum_paths")
+#: tc_chain_* metrics, and the model-guided-serving probe (serve_*)
+SMOKE_SUITES = ("batched_sweep", "contractions", "einsum_paths", "serving")
 
 
 def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:

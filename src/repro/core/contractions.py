@@ -398,6 +398,34 @@ def predict_contraction(alg: ContractionAlgorithm,
     return total
 
 
+def _session_for(fn: str, session, *, backend=None, suite=None, cache=None,
+                 repetitions=None, extra_deprecated=None):
+    """The one shim implementation behind every legacy entry point.
+
+    A supplied ``session=`` conflicts with the legacy resource kwargs it
+    replaced (silently preferring one would hide a caller bug); legacy
+    kwargs construct a session internally under a single
+    :class:`DeprecationWarning`; a bare call gets a fresh default session
+    — exactly the resources it would have built before the redesign.
+    """
+    from ..tc.session import (PredictorSession,  # lazy: tc builds on core
+                              warn_deprecated_kwargs)
+    legacy = {"backend": backend, "suite": suite, "cache": cache,
+              "repetitions": repetitions, **(extra_deprecated or {})}
+    if session is not None:
+        used = [k for k, v in legacy.items() if v is not None]
+        if used:
+            raise ValueError(
+                f"{fn}: session= already owns the "
+                f"{', '.join(k + '=' for k in used)} resource(s); pass "
+                f"one or the other")
+        return session
+    warn_deprecated_kwargs(fn, "the session's methods", legacy,
+                           stacklevel=4)
+    return PredictorSession(backend=backend or "numpy", suite=suite,
+                            cache=cache, repetitions=repetitions)
+
+
 def rank_contraction_algorithms(spec: ContractionSpec,
                                 sizes: Optional[Mapping[str, int]] = None, *,
                                 algorithms: Optional[Sequence[
@@ -410,6 +438,7 @@ def rank_contraction_algorithms(spec: ContractionSpec,
                                 cache=None,
                                 sizes_grid: Optional[Sequence[
                                     Mapping[str, int]]] = None,
+                                session=None,
                                 ) -> Union[
                                     List[Tuple[ContractionAlgorithm, float]],
                                     List[List[Tuple[ContractionAlgorithm,
@@ -419,19 +448,25 @@ def rank_contraction_algorithms(spec: ContractionSpec,
     By default this runs on :class:`repro.tc.ContractionPredictor`: the
     candidate set (including batched-kernel algorithms when ``algorithms``
     is not given) shares one deduplicated micro-benchmark suite and is
-    predicted through the batched :class:`PredictionEngine`
-    (``backend="numpy"|"jax"``; pass ``suite=``/``cache=`` to share
-    measurements and compiled batches across rankings).  ``batched=False`` keeps the original per-algorithm
-    path — one independent micro-benchmark per candidate — as the
-    equivalence oracle.
+    predicted through the batched :class:`PredictionEngine`.  Pass
+    ``session=`` (a :class:`repro.tc.PredictorSession`) to share its
+    suite, trace cache and backend across calls — the sprawl of
+    per-call ``backend=``/``suite=``/``cache=``/``repetitions=``/
+    ``sizes_grid=`` keywords is DEPRECATED in favor of the session and
+    its methods (one release of shim support: they still work, warning,
+    by constructing a session internally).  ``batched=False`` keeps the
+    original per-algorithm path — one independent micro-benchmark per
+    candidate — as the equivalence oracle.
 
     Size-sweep mode: pass ``sizes_grid=`` (a sequence of size mappings)
     instead of ``sizes`` to rank the candidate set at every size point
     from ONE shared suite — returns one ranked list per size point, and
     only the genuinely new (equation, shapes, cache-class) keys are
-    measured (see :func:`repro.tc.rank_contraction_sweep`, which also
+    measured (deprecated alias of
+    :meth:`repro.tc.PredictorSession.rank_contraction_sweep`, which also
     exposes the shared suite and per-point predictors).
     """
+    algorithms = list(algorithms) if algorithms is not None else None
     if sizes_grid is not None:
         if sizes is not None:
             raise ValueError("pass sizes= or sizes_grid=, not both")
@@ -439,29 +474,32 @@ def rank_contraction_algorithms(spec: ContractionSpec,
             raise ValueError("sizes_grid= runs on the batched predictor; "
                              "the scalar oracle (batched=False) has no "
                              "size-sweep mode")
-        from ..tc.predictor import rank_contraction_sweep  # lazy: tc on core
-        sweep = rank_contraction_sweep(
-            spec, sizes_grid, stat=stat, backend=backend or "numpy",
-            algorithms=list(algorithms) if algorithms is not None else None,
-            repetitions=repetitions, suite=suite, cache=cache)
+        sess = _session_for("rank_contraction_algorithms", session,
+                            backend=backend, suite=suite, cache=cache,
+                            repetitions=repetitions,
+                            extra_deprecated={"sizes_grid": sizes_grid})
+        sweep = sess.rank_contraction_sweep(spec, sizes_grid, stat=stat,
+                                            algorithms=algorithms)
         return [[(r.algorithm, getattr(r.runtime, stat)) for r in ranking]
                 for ranking in sweep.rankings]
     if sizes is None:
         raise ValueError("sizes is required (or pass sizes_grid= for the "
                          "size-sweep mode)")
     if batched:
-        from ..tc import ContractionPredictor  # lazy: tc builds on this module
-        pred = ContractionPredictor(
-            spec, sizes,
-            algorithms=list(algorithms) if algorithms is not None else None,
-            repetitions=repetitions, suite=suite, cache=cache)
-        ranked = pred.rank(stat=stat, backend=backend or "numpy")
+        sess = _session_for("rank_contraction_algorithms", session,
+                            backend=backend, suite=suite, cache=cache,
+                            repetitions=repetitions)
+        ranked = sess.rank_contraction_algorithms(spec, sizes, stat=stat,
+                                                  algorithms=algorithms)
         return [(r.algorithm, getattr(r.runtime, stat)) for r in ranked]
     if backend is not None or suite is not None or cache is not None:
         raise ValueError("backend=/suite=/cache= apply to the batched "
                          "predictor; the scalar oracle (batched=False) has "
                          "none of them")
-    algs = list(algorithms) if algorithms is not None else \
+    if session is not None:
+        raise ValueError("session= applies to the batched predictor; the "
+                         "scalar oracle (batched=False) runs without one")
+    algs = algorithms if algorithms is not None else \
         generate_algorithms(spec)
     reps = 5 if repetitions is None else repetitions
     ranked = [(a, predict_contraction(a, sizes, repetitions=reps,

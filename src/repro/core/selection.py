@@ -138,20 +138,25 @@ def select_contraction_algorithm(spec, sizes: Mapping[str, int], *,
                                  stat: str = "med",
                                  backend: Optional[str] = None,
                                  repetitions: Optional[int] = None,
-                                 predictor=None) -> str:
+                                 predictor=None, session=None) -> str:
     """Ch. 6 counterpart of :func:`select_algorithm`: the contraction
     algorithm (traversal x kernel, batched kernels included) with the
     fastest predicted total runtime.
 
     Runs on :class:`repro.tc.ContractionPredictor` — deduplicated
     cache-aware micro-benchmarks compiled through the same batched
-    :class:`PredictionEngine` the blocked-algorithm entry points use; pass
-    ``predictor=`` to reuse its suite measurements and compiled batches
-    across calls.
+    :class:`PredictionEngine` the blocked-algorithm entry points use.
+    Pass ``session=`` (a :class:`repro.tc.PredictorSession`) to share its
+    suite measurements and compiled batches across calls; the per-call
+    ``backend=``/``repetitions=``/``predictor=`` keywords are DEPRECATED
+    in favor of the session (one release of shim support).
     """
-    from ..tc import ContractionPredictor  # lazy: tc builds on repro.core
-    from .contractions import ContractionSpec
+    from ..tc.session import warn_deprecated_kwargs  # lazy: tc needs core
+    from .contractions import ContractionSpec, _session_for
     if predictor is not None:
+        if session is not None:
+            raise ValueError("session= already owns the predictor "
+                             "resources; pass one or the other")
         if repetitions is not None:
             raise ValueError("repetitions= applies to a newly built "
                              "predictor; the supplied predictor's suite "
@@ -164,10 +169,15 @@ def select_contraction_algorithm(spec, sizes: Mapping[str, int], *,
                 f"{predictor.spec.einsum_expr()} at {predictor.sizes}, not "
                 f"{want.einsum_expr()} at {dict(sizes)}; the selection "
                 f"would silently answer the wrong contraction")
-        pred = predictor
-    else:
-        pred = ContractionPredictor(spec, sizes, repetitions=repetitions)
-    return pred.rank(stat=stat, backend=backend or "numpy")[0].name
+        warn_deprecated_kwargs(
+            "select_contraction_algorithm",
+            "session.select_contraction_algorithm (the session memoizes "
+            "the predictor)",
+            {"predictor": predictor, "backend": backend})
+        return predictor.rank(stat=stat, backend=backend or "numpy")[0].name
+    sess = _session_for("select_contraction_algorithm", session,
+                        backend=backend, repetitions=repetitions)
+    return sess.select_contraction_algorithm(spec, sizes, stat=stat)
 
 
 def _resolve_chain_predictor(chain, sizes, repetitions, predictor):
@@ -195,7 +205,7 @@ def rank_einsum_paths(chain, sizes: Optional[Mapping[str, int]] = None, *,
                       predictor=None,
                       sizes_grid: Optional[Sequence[
                           Mapping[str, int]]] = None,
-                      suite=None, cache=None):
+                      suite=None, cache=None, session=None):
     """Rank every pairwise contraction path of an N-operand einsum.
 
     The chain counterpart of :func:`rank_algorithms`: all candidate paths
@@ -212,49 +222,68 @@ def rank_einsum_paths(chain, sizes: Optional[Mapping[str, int]] = None, *,
     Size-sweep mode: pass ``sizes_grid=`` (a sequence of size mappings)
     instead of ``sizes`` to rank every path at every size point from ONE
     shared suite — returns one fastest-first ranking per size point; only
-    the genuinely new micro-benchmark keys are measured.  ``suite=`` /
-    ``cache=`` (sweep mode only — the single-size mode shares state via
-    ``predictor=``) extend a suite that already served other rankings
-    (see :func:`repro.tc.rank_einsum_sweep`, which also exposes the
-    shared suite and per-point predictors).
+    the genuinely new micro-benchmark keys are measured.
+
+    Pass ``session=`` (a :class:`repro.tc.PredictorSession`) to share its
+    suite, trace cache and backend across calls; the per-call
+    ``backend=``/``repetitions=``/``predictor=``/``suite=``/``cache=``/
+    ``sizes_grid=`` keywords are DEPRECATED in favor of the session and
+    its :meth:`~repro.tc.PredictorSession.rank_einsum_paths` /
+    :meth:`~repro.tc.PredictorSession.rank_einsum_sweep` methods (one
+    release of shim support).
     """
+    from ..tc.session import warn_deprecated_kwargs  # lazy: tc needs core
+    from .contractions import _session_for
     if sizes_grid is not None:
         if sizes is not None or predictor is not None:
             raise ValueError("sizes_grid= replaces sizes= and builds its "
                              "own per-point predictors; pass one mode or "
                              "the other")
-        from ..tc.chains import rank_einsum_sweep  # lazy: tc needs core
-        return list(rank_einsum_sweep(chain, sizes_grid, stat=stat,
-                                      backend=backend or "numpy",
-                                      repetitions=repetitions,
-                                      suite=suite, cache=cache).rankings)
+        sess = _session_for("rank_einsum_paths", session, backend=backend,
+                            suite=suite, cache=cache,
+                            repetitions=repetitions,
+                            extra_deprecated={"sizes_grid": sizes_grid})
+        return list(sess.rank_einsum_sweep(chain, sizes_grid,
+                                           stat=stat).rankings)
     if suite is not None or cache is not None:
         raise ValueError("suite=/cache= apply to the sizes_grid= sweep "
                          "mode; the single-size path shares state via "
-                         "predictor=")
+                         "session= (or the deprecated predictor=)")
     if sizes is None:
         raise ValueError("sizes is required (or pass sizes_grid= for the "
                          "size-sweep mode)")
-    pred = _resolve_chain_predictor(chain, sizes, repetitions, predictor)
-    return pred.rank_paths(stat=stat, backend=backend or "numpy")
+    if predictor is not None:
+        if session is not None:
+            raise ValueError("session= already owns the predictor "
+                             "resources; pass one or the other")
+        pred = _resolve_chain_predictor(chain, sizes, repetitions, predictor)
+        warn_deprecated_kwargs(
+            "rank_einsum_paths",
+            "session.rank_einsum_paths (the session memoizes the "
+            "predictor)",
+            {"predictor": predictor, "backend": backend})
+        return pred.rank_paths(stat=stat, backend=backend or "numpy")
+    sess = _session_for("rank_einsum_paths", session, backend=backend,
+                        repetitions=repetitions)
+    return sess.rank_einsum_paths(chain, sizes, stat=stat)
 
 
 def select_einsum_path(chain, sizes: Mapping[str, int], *,
                        stat: str = "med",
                        backend: Optional[str] = None,
                        repetitions: Optional[int] = None,
-                       predictor=None):
+                       predictor=None, session=None):
     """The fastest-predicted contraction path of an N-operand einsum.
 
     ``rank_einsum_paths(...)[0]``: one :class:`repro.tc.RankedChain`
     carrying the chosen path (``.name`` is its nested-parenthesis form,
     e.g. ``((0.1).(2.3))``), the selected algorithm per step and the
-    composed total-runtime prediction.  Same keywords as
-    :func:`rank_einsum_paths`.
+    composed total-runtime prediction.  Same keywords (and the same
+    deprecations) as :func:`rank_einsum_paths`.
     """
     return rank_einsum_paths(chain, sizes, stat=stat, backend=backend,
                              repetitions=repetitions,
-                             predictor=predictor)[0]
+                             predictor=predictor, session=session)[0]
 
 
 def performance_yield(measured_runtime: Mapping[int, float], b_pred: int,

@@ -1,1 +1,20 @@
-"""repro.serve."""
+"""repro.serve — production-shaped serving on the prediction stack.
+
+:mod:`~repro.serve.engine` is the static-batch continuous-batching engine
+(step hooks: blocking prefill, interleaved prefill lanes, one fused
+``advance()`` step); :mod:`~repro.serve.scheduler` drives it — the FIFO
+baseline or the :class:`~repro.serve.scheduler.ModelGuidedScheduler`,
+which scores admit/defer/interleave candidates on step-cost predictions
+measured through a :class:`~repro.tc.session.PredictorSession`.  See
+``docs/serving-prediction.md``.
+"""
+
+from .engine import EngineStats, Request, ServeEngine
+from .scheduler import (FifoScheduler, ModelGuidedScheduler, Plan,
+                        StepCostModel, build_step_cost_model, serve_loop)
+
+__all__ = [
+    "EngineStats", "Request", "ServeEngine",
+    "FifoScheduler", "ModelGuidedScheduler", "Plan", "StepCostModel",
+    "build_step_cost_model", "serve_loop",
+]

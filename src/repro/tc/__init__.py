@@ -10,6 +10,12 @@ through the PR-1/2 :class:`~repro.core.predict.PredictionEngine`
 per-step predictors into multi-contraction chain rankings with
 cache-state propagation between steps (:mod:`~repro.tc.chains`).
 
+Since the session redesign, :class:`~repro.tc.session.PredictorSession`
+is the single entry point: one object owning the shared suite, trace
+cache and backend, fronting every ranking/selection mode and the serving
+scheduler's step-cost models.  The legacy module-level call forms remain
+as one-release deprecation shims.
+
 See ``docs/contraction-prediction.md`` for the full walkthrough.
 """
 
@@ -24,6 +30,7 @@ from .kernels import (BATCH_SUFFIX, BATCHABLE_KERNELS, base_kernel,
                       validate_algorithms)
 from .predictor import (ContractionPredictor, ContractionSizeSweep,
                         RankedContraction, rank_contraction_sweep)
+from .session import PredictorSession, warn_deprecated_kwargs
 from .suite import (COLD, WARM, MicroBenchmark, MicroBenchmarkKey,
                     MicroBenchmarkSuite, benchmark_key, canonical_equation)
 
@@ -40,4 +47,5 @@ __all__ = [
     "ChainSpec", "ChainStep", "RankedChain", "compose_chain_runtime",
     "execute_chain", "execute_chain_reference", "execute_path_reference",
     "rank_einsum_sweep", "validate_paths",
+    "PredictorSession", "warn_deprecated_kwargs",
 ]

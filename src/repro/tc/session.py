@@ -1,0 +1,256 @@
+"""One unified entry point for the prediction stack: `PredictorSession`.
+
+The ranking entry points grew organically: every one of
+``rank_contraction_algorithms`` / ``rank_einsum_paths`` /
+``rank_contraction_sweep`` / ``rank_einsum_sweep`` /
+``select_contraction_algorithm`` / ``select_einsum_path`` sprouted its own
+``backend=`` / ``suite=`` / ``cache=`` / ``repetitions=`` / ``sizes_grid=``
+keywords, and sharing measurements across calls meant threading the same
+suite and trace cache through every call site by hand.
+
+:class:`PredictorSession` replaces that sprawl with ONE object that owns
+the four shared resources —
+
+* the :class:`~repro.tc.suite.MicroBenchmarkSuite` (deduplicated
+  cache-aware measurements, cost accounting),
+* the :class:`~repro.core.predict.TraceCache` (compiled sweep batches),
+* the evaluation **backend** (``"numpy"`` or ``"jax"``),
+* the per-(spec, sizes) predictor instances themselves (so a repeated
+  ranking reuses the compiled :class:`~repro.core.predict.CompiledCalls`
+  batch, not just the measurements)
+
+— and exposes every ranking/selection mode as a method.  Two sessions can
+still share measurements by passing one session's ``suite``/``cache`` into
+the other's constructor (e.g. a numpy and a jax session over one suite).
+
+The legacy module-level call forms keep working for one release as thin
+deprecation shims that construct a session internally (see
+:func:`warn_deprecated_kwargs`); ``docs/architecture.md`` documents the
+session as the single entry point, and the serving scheduler
+(:mod:`repro.serve.scheduler`) builds its step-cost models exclusively
+through a session.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from ..core.contractions import ContractionAlgorithm, ContractionSpec
+from ..core.predict import TraceCache
+from .chains import (ChainPredictor, ChainSizeSweep, RankedChain,
+                     rank_einsum_sweep)
+from .predictor import (ContractionPredictor, ContractionSizeSweep,
+                        RankedContraction, rank_contraction_sweep)
+from .suite import MicroBenchmarkSuite, resolve_suite
+
+
+def warn_deprecated_kwargs(fn: str, replacement: str,
+                           kwargs: Mapping[str, object], *,
+                           stacklevel: int = 3) -> bool:
+    """Emit ONE :class:`DeprecationWarning` for legacy resource kwargs.
+
+    ``kwargs`` maps keyword names to the values the caller passed; every
+    non-``None`` entry is deprecated.  Returns whether any were used, so
+    the shim knows to route through an internally-constructed session.
+    The warning names the replacement explicitly — these shims are
+    scheduled for removal after one release.
+    """
+    used = [k for k, v in kwargs.items() if v is not None]
+    if not used:
+        return False
+    warnings.warn(
+        f"{fn}: the {', '.join(k + '=' for k in used)} keyword(s) are "
+        f"deprecated; construct a repro.tc.PredictorSession and use "
+        f"{replacement} instead (one release of shim support)",
+        DeprecationWarning, stacklevel=stacklevel)
+    return True
+
+
+class PredictorSession:
+    """Owns the shared prediction resources and every ranking entry point.
+
+    ``backend`` fixes how compiled batches are evaluated (``"numpy"`` or
+    ``"jax"``) for every method of this session; build a second session
+    over the same ``suite``/``cache`` to compare backends without
+    re-measuring or re-tracing.  ``repetitions`` configures a freshly
+    built suite and conflicts with passing ``suite=`` (the suite owns its
+    measurement protocol — see
+    :func:`~repro.tc.suite.resolve_suite`).
+
+    Predictors are memoized per (spec, sizes, candidate-set) signature:
+    calling :meth:`rank_contraction_algorithms` twice with equal
+    arguments reuses the first call's compiled batch outright.
+    """
+
+    def __init__(self, *, backend: str = "numpy",
+                 suite: Optional[MicroBenchmarkSuite] = None,
+                 cache: Optional[TraceCache] = None,
+                 repetitions: Optional[int] = None):
+        self.backend = backend
+        self.suite = resolve_suite(suite, repetitions)
+        self.cache = cache if cache is not None else TraceCache()
+        self._contraction: Dict[Tuple, ContractionPredictor] = {}
+        self._chain: Dict[Tuple, ChainPredictor] = {}
+
+    # -------------------------------------------------------- predictors --
+    def contraction_predictor(self, spec: Union[ContractionSpec, str],
+                              sizes: Mapping[str, int], *,
+                              algorithms: Optional[
+                                  Sequence[ContractionAlgorithm]] = None,
+                              include_batched: bool = True,
+                              arrival: Optional[Mapping[str, str]] = None,
+                              ) -> ContractionPredictor:
+        """The (memoized) per-contraction predictor on this session's
+        suite/cache.  Explicit ``algorithms`` bypass the memo — a custom
+        candidate set is the caller's to manage."""
+        spec = spec if isinstance(spec, ContractionSpec) else \
+            ContractionSpec.parse(spec)
+        if algorithms is not None:
+            return ContractionPredictor(spec, sizes, algorithms=algorithms,
+                                        include_batched=include_batched,
+                                        suite=self.suite, cache=self.cache,
+                                        arrival=arrival)
+        key = (spec, tuple(sorted(sizes.items())), include_batched,
+               tuple(sorted(arrival.items())) if arrival else None)
+        pred = self._contraction.get(key)
+        if pred is None:
+            pred = ContractionPredictor(spec, sizes,
+                                        include_batched=include_batched,
+                                        suite=self.suite, cache=self.cache,
+                                        arrival=arrival)
+            self._contraction[key] = pred
+        return pred
+
+    def chain_predictor(self, chain, sizes: Mapping[str, int], *,
+                        include_batched: bool = True,
+                        kernels: Optional[Sequence[str]] = None,
+                        max_loop_perms: int = 24,
+                        memory_limit_bytes: Optional[int] = None,
+                        ) -> ChainPredictor:
+        """The (memoized) per-einsum chain predictor on this session's
+        suite/cache."""
+        from .chains import ChainSpec
+        chain = ChainSpec.parse(chain)
+        key = (chain, tuple(sorted(sizes.items())), include_batched,
+               tuple(kernels) if kernels is not None else None,
+               max_loop_perms, memory_limit_bytes)
+        pred = self._chain.get(key)
+        if pred is None:
+            pred = ChainPredictor(chain, sizes, suite=self.suite,
+                                  cache=self.cache,
+                                  include_batched=include_batched,
+                                  kernels=kernels,
+                                  max_loop_perms=max_loop_perms,
+                                  memory_limit_bytes=memory_limit_bytes)
+            self._chain[key] = pred
+        return pred
+
+    # ---------------------------------------------------- contractions --
+    def rank_contraction_algorithms(
+            self, spec: Union[ContractionSpec, str],
+            sizes: Mapping[str, int], *, stat: str = "med",
+            algorithms: Optional[Sequence[ContractionAlgorithm]] = None,
+            include_batched: bool = True,
+            arrival: Optional[Mapping[str, str]] = None,
+            ) -> List[RankedContraction]:
+        """All candidate algorithms fastest-predicted first (Ch. 6) as
+        :class:`~repro.tc.predictor.RankedContraction` records."""
+        pred = self.contraction_predictor(spec, sizes,
+                                          algorithms=algorithms,
+                                          include_batched=include_batched,
+                                          arrival=arrival)
+        return pred.rank(stat=stat, backend=self.backend)
+
+    def select_contraction_algorithm(
+            self, spec: Union[ContractionSpec, str],
+            sizes: Mapping[str, int], *, stat: str = "med",
+            include_batched: bool = True) -> str:
+        """The fastest-predicted candidate's name —
+        ``rank_contraction_algorithms(...)[0].name``."""
+        return self.rank_contraction_algorithms(
+            spec, sizes, stat=stat,
+            include_batched=include_batched)[0].name
+
+    def rank_contraction_sweep(
+            self, spec: Union[ContractionSpec, str],
+            sizes_grid: Sequence[Mapping[str, int]], *, stat: str = "med",
+            algorithms: Optional[Sequence[ContractionAlgorithm]] = None,
+            include_batched: bool = True,
+            arrival: Optional[Mapping[str, str]] = None,
+            ) -> ContractionSizeSweep:
+        """Size-sweep autotuning on this session's shared suite: only
+        genuinely new (equation, shapes, cache-class) keys are measured
+        across the grid."""
+        return rank_contraction_sweep(
+            spec, sizes_grid, stat=stat, backend=self.backend,
+            algorithms=algorithms, include_batched=include_batched,
+            suite=self.suite, cache=self.cache, arrival=arrival)
+
+    # ----------------------------------------------------------- chains --
+    def rank_einsum_paths(self, chain, sizes: Mapping[str, int], *,
+                          stat: str = "med",
+                          include_batched: bool = True,
+                          kernels: Optional[Sequence[str]] = None,
+                          max_loop_perms: int = 24,
+                          memory_limit_bytes: Optional[int] = None,
+                          ) -> List[RankedChain]:
+        """All pairwise contraction paths of an einsum, fastest-predicted
+        chain total first, from this session's shared suite."""
+        pred = self.chain_predictor(chain, sizes,
+                                    include_batched=include_batched,
+                                    kernels=kernels,
+                                    max_loop_perms=max_loop_perms,
+                                    memory_limit_bytes=memory_limit_bytes)
+        return pred.rank_paths(stat=stat, backend=self.backend)
+
+    def select_einsum_path(self, chain, sizes: Mapping[str, int], *,
+                           stat: str = "med",
+                           include_batched: bool = True) -> RankedChain:
+        """The fastest-predicted path — ``rank_einsum_paths(...)[0]``."""
+        return self.rank_einsum_paths(
+            chain, sizes, stat=stat, include_batched=include_batched)[0]
+
+    def rank_einsum_sweep(self, chain,
+                          sizes_grid: Sequence[Mapping[str, int]], *,
+                          stat: str = "med",
+                          include_batched: bool = True,
+                          kernels: Optional[Sequence[str]] = None,
+                          max_loop_perms: int = 24,
+                          memory_limit_bytes: Optional[int] = None,
+                          ) -> ChainSizeSweep:
+        """Chain-level size sweep from this session's shared suite."""
+        return rank_einsum_sweep(
+            chain, sizes_grid, stat=stat, backend=self.backend,
+            suite=self.suite, cache=self.cache,
+            include_batched=include_batched, kernels=kernels,
+            max_loop_perms=max_loop_perms,
+            memory_limit_bytes=memory_limit_bytes)
+
+    # ---------------------------------------------------------- serving --
+    def step_cost_model(self, cfg, *, slots: int):
+        """Measured per-tick cost model of a serve engine's step kernels.
+
+        Lazy import: serving builds ON the prediction stack (the same
+        direction every other layer reaches), the session merely fronts
+        it.  See :func:`repro.serve.scheduler.build_step_cost_model`.
+        """
+        from ..serve.scheduler import build_step_cost_model
+        return build_step_cost_model(self, cfg, slots=slots)
+
+    def guided_scheduler(self, cfg, *, slots: int, **kwargs):
+        """A :class:`repro.serve.scheduler.ModelGuidedScheduler` driven by
+        this session's measured step-cost model (``kwargs`` forward to the
+        scheduler constructor: ``window=``, ``max_defer=``, ...)."""
+        from ..serve.scheduler import ModelGuidedScheduler
+        return ModelGuidedScheduler(self.step_cost_model(cfg, slots=slots),
+                                    **kwargs)
+
+    # ------------------------------------------------------------- cost --
+    def counters(self) -> Dict[str, float]:
+        """The shared suite's running totals plus trace-cache hit/miss
+        counts — diff two snapshots to see what one phase added."""
+        out = dict(self.suite.counters())
+        out["trace_hits"] = self.cache.hits
+        out["trace_misses"] = self.cache.misses
+        return out

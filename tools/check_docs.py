@@ -12,10 +12,17 @@ list):
   at an existing file, and ``#fragment`` anchors must match a heading in
   the target document (GitHub slug rules: lowercase, punctuation
   stripped, spaces to dashes);
+* **wiki-links** — ``[[slug]]`` cross-references (prose shorthand for a
+  sibling document) must resolve to ``docs/<slug>.md``;
 * **snippets** — every fenced ```` ```python ```` block is executed, in
   file order, in one shared namespace per file (so later snippets can
   build on earlier ones).  Put ``<!-- docs-check: skip -->`` on the line
-  directly above a fence to exclude a block (e.g. pseudocode).
+  directly above a fence to exclude a block (e.g. pseudocode);
+* **deprecated kwargs** — python snippets must not call the legacy
+  prediction entry points with the kwargs the ``PredictorSession``
+  redesign deprecated (``suite=``/``cache=``/``backend=``/
+  ``repetitions=``/``sizes_grid=``/``predictor=``): docs are the first
+  thing readers copy, so the old API must not reappear in examples.
 
 Exit code 0 when everything passes; 1 with a per-finding report
 otherwise.  The CI fast lane runs this after the tests, and
@@ -43,9 +50,24 @@ def _rel(path: Path) -> str:
 
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_WIKI_LINK = re.compile(r"(?<!\[)\[\[([A-Za-z0-9._-]+)\]\](?!\])")
 _HEADING = re.compile(r"^#{1,6}\s+(.*)$")
 _FENCE = re.compile(r"^```(\w*)\s*$")
 _SKIP_MARK = "<!-- docs-check: skip -->"
+
+#: entry points whose per-call resource kwargs the PredictorSession
+#: redesign deprecated, and the kwargs that must not appear in any doc
+#: snippet calling them
+_DEPRECATED_KWARGS = {
+    "rank_contraction_algorithms": ("suite", "cache", "backend",
+                                    "repetitions", "sizes_grid"),
+    "select_contraction_algorithm": ("backend", "repetitions", "predictor"),
+    "rank_einsum_paths": ("suite", "cache", "backend", "repetitions",
+                          "sizes_grid", "predictor"),
+    "select_einsum_path": ("backend", "repetitions", "predictor"),
+    "rank_contraction_sweep": ("suite", "cache", "backend", "repetitions"),
+    "rank_einsum_sweep": ("suite", "cache", "backend", "repetitions"),
+}
 
 
 def doc_files(explicit: List[str]) -> List[Path]:
@@ -113,6 +135,64 @@ def check_links(path: Path) -> List[str]:
     return problems
 
 
+def check_wiki_links(path: Path) -> List[str]:
+    """Unresolvable ``[[slug]]`` cross-references, as messages.
+
+    A wiki-link names a sibling document by slug: ``[[serving-prediction]]``
+    must resolve to ``docs/serving-prediction.md``.  Fenced code blocks are
+    exempt (``[[...]]`` is valid syntax in several languages).
+    """
+    problems = []
+    in_fence = False
+    for ln, line in enumerate(path.read_text().splitlines(), 1):
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for slug in _WIKI_LINK.findall(line):
+            target = ROOT / "docs" / f"{slug}.md"
+            if not target.exists():
+                problems.append(f"{_rel(path)}:{ln}: broken wiki-link -> "
+                                f"[[{slug}]] (no docs/{slug}.md)")
+    return problems
+
+
+def _call_spans(src: str, fn: str) -> List[str]:
+    """The argument text of every ``fn(...)`` call in a snippet
+    (paren-walking, so multi-line calls are covered)."""
+    spans = []
+    for m in re.finditer(rf"(?<![\w.]){fn}\s*\(", src):
+        depth, i = 1, m.end()
+        while i < len(src) and depth:
+            depth += {"(": 1, ")": -1}.get(src[i], 0)
+            i += 1
+        spans.append(src[m.end():i - 1])
+    return spans
+
+
+def check_deprecated_kwargs(path: Path) -> List[str]:
+    """Doc snippets calling legacy entry points with deprecated kwargs.
+
+    The shims keep the old forms *working* for one release, but docs are
+    what readers copy — they must demonstrate the
+    ``repro.tc.PredictorSession`` spelling exclusively.
+    """
+    problems = []
+    for start, src in snippets_of(path):
+        for fn, kwargs in _DEPRECATED_KWARGS.items():
+            for span in _call_spans(src, fn):
+                used = [k for k in kwargs
+                        if re.search(rf"(?<![\w]){k}\s*=", span)]
+                if used:
+                    problems.append(
+                        f"{_rel(path)}:{start}: snippet calls {fn}() with "
+                        f"deprecated kwarg(s) "
+                        f"{', '.join(k + '=' for k in used)} — use a "
+                        f"repro.tc.PredictorSession instead")
+    return problems
+
+
 def snippets_of(path: Path) -> List[Tuple[int, str]]:
     """(start line, source) of every runnable python snippet in a file."""
     out = []
@@ -163,6 +243,8 @@ def main() -> int:
     n_snippets = 0
     for path in doc_files(args.files):
         problems += check_links(path)
+        problems += check_wiki_links(path)
+        problems += check_deprecated_kwargs(path)
         if not args.no_exec:
             snips = snippets_of(path)
             n_snippets += len(snips)
