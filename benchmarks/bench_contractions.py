@@ -31,8 +31,8 @@ import numpy as np
 
 from repro.core.contractions import (ContractionSpec, execute,
                                      measure_contraction)
-from repro.tc import (ContractionPredictor, is_batched_kernel,
-                      rank_contraction_sweep)
+from repro.tc import (ContractionPredictor, PredictorSession,
+                      is_batched_kernel)
 
 from .common import best_of as _best_of
 from .common import is_smoke
@@ -88,7 +88,8 @@ def _run_full(report: List[str]) -> None:
 
 def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
     spec = ContractionSpec.parse(SMOKE_SPEC)
-    pred = ContractionPredictor(spec, SMOKE_SIZES, repetitions=2)
+    sess = PredictorSession(repetitions=2)
+    pred = sess.contraction_predictor(spec, SMOKE_SIZES)
     pred.prepare()
     t_suite = pred.suite.cost_seconds
     n_batched = sum(is_batched_kernel(a.kernel) for a in pred.algorithms)
@@ -141,7 +142,7 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
         "tc_rank64_backend_agree": bool(backend_agree),
         "tc_rank64_oracle_agree": bool(oracle_agree),
         "tc_rank64_exec_s": t_exec,
-        "tc_rank64_cost_fraction": fraction,
+        "tc_rank64_cost_frac": fraction,
     })
 
     # ---- size-sweep autotuning over 3 batch sizes, ONE shared suite ----
@@ -149,8 +150,7 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
     # b=8; sweeping b re-predicts the loop-nest candidates for free and
     # only measures the batched-kernel signatures whose shapes contain b
     before = pred.suite.counters()
-    sweep = rank_contraction_sweep(spec, SWEEP_GRID, suite=pred.suite,
-                                   cache=pred.cache, backend="numpy")
+    sweep = sess.rank_contraction_sweep(spec, SWEEP_GRID)
     added = pred.suite.counters()
     t_sweep_np = _best_of(lambda: [p.rank(backend="numpy")
                                    for p in sweep.predictors], 3)
@@ -178,7 +178,7 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
         "tc_sweep_suite_s": sweep.suite.cost_seconds,
         "tc_sweep_rank_numpy_s": t_sweep_np,
         "tc_sweep_rank_jax_s": t_sweep_jax,
-        "tc_sweep_cost_fraction": sweep_fraction,
+        "tc_sweep_cost_frac": sweep_fraction,
     })
 
 

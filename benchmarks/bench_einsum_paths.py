@@ -32,8 +32,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.tc import (ChainPredictor, ChainSpec, execute_chain,
-                      execute_chain_reference, rank_einsum_sweep)
+from repro.tc import (ChainPredictor, ChainSpec, PredictorSession,
+                      execute_chain, execute_chain_reference)
 
 from .common import best_of as _best_of
 from .common import is_smoke
@@ -97,11 +97,12 @@ def _run_full(report: List[str]) -> None:
 
 def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
     chain = ChainSpec.parse(SMOKE_CHAIN)
-    pred = ChainPredictor(chain, SMOKE_SIZES,
-                          repetitions=SMOKE_REPETITIONS,
-                          include_batched=False, kernels=SMOKE_KERNELS,
-                          max_loop_perms=SMOKE_LOOP_PERMS,
-                          memory_limit_bytes=SMOKE_LIMIT)
+    sess = PredictorSession(repetitions=SMOKE_REPETITIONS)
+    pred = sess.chain_predictor(chain, SMOKE_SIZES,
+                                include_batched=False,
+                                kernels=SMOKE_KERNELS,
+                                max_loop_perms=SMOKE_LOOP_PERMS,
+                                memory_limit_bytes=SMOKE_LIMIT)
     ranked_np = pred.rank_paths(backend="numpy")    # suite runs here once
     t_suite = pred.suite.cost_seconds
     t_np = _best_of(lambda: pred.rank_paths(backend="numpy"), 3)
@@ -149,7 +150,7 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
         "tc_chain_backend_agree": bool(backend_agree),
         "tc_chain_oracle_agree": bool(oracle_top_agree),
         "tc_chain_exec_s": t_exec,
-        "tc_chain_cost_fraction": fraction,
+        "tc_chain_cost_frac": fraction,
     })
 
     # ---- chain-level size sweep: 3 values of a, SAME suite ----
@@ -157,11 +158,10 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
     # points only measure the signatures whose shapes contain a
     before = pred.suite.counters()
     grid = [dict(SMOKE_SIZES, a=a) for a in SWEEP_A]
-    sweep = rank_einsum_sweep(chain, grid, suite=pred.suite,
-                              cache=pred.cache, include_batched=False,
-                              kernels=SMOKE_KERNELS,
-                              max_loop_perms=SMOKE_LOOP_PERMS,
-                              memory_limit_bytes=SMOKE_LIMIT)
+    sweep = sess.rank_einsum_sweep(chain, grid, include_batched=False,
+                                   kernels=SMOKE_KERNELS,
+                                   max_loop_perms=SMOKE_LOOP_PERMS,
+                                   memory_limit_bytes=SMOKE_LIMIT)
     added = pred.suite.counters()
     new_benchmarks = int(added["n_benchmarks"] - before["n_benchmarks"])
     sweep_fraction = sweep.cost_fraction(t_exec)
@@ -175,7 +175,7 @@ def _run_smoke(report: List[str], results: Dict[str, object]) -> None:
         "tc_sweep_chain_points": len(grid),
         "tc_sweep_chain_new_benchmarks": new_benchmarks,
         "tc_sweep_chain_suite_s": sweep.suite.cost_seconds,
-        "tc_sweep_chain_cost_fraction": sweep_fraction,
+        "tc_sweep_chain_cost_frac": sweep_fraction,
     })
 
 

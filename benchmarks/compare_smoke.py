@@ -10,13 +10,21 @@ current one is written.  A tracked metric that grew by more than
 ``threshold`` x emits a GitHub Actions ``::warning::`` annotation (the job
 still passes — smoke timings on shared runners are noisy, so regressions
 are flagged for a human, not hard-failed).  Unreadable artifacts are also
-only warned about; the exit code is always 0.
+only warned about.
 
 Besides cross-commit trends, the CURRENT artifact alone is checked for
 backend inversions: the fused jax path must not be slower than its numpy
 counterpart (the original motivation for fusing the engine into one XLA
 program), so every ``BACKEND_RATIOS`` pair warns when jax > numpy —
 also when no previous artifact exists (pass ``-`` as PREVIOUS).
+
+One check DOES fail the job: a metric the current artifact carries that
+neither :data:`METRICS` nor :data:`UNTRACKED` lists.  A number computed
+on every PR but watched by nobody is a blind spot; adding the metric to
+a table (trended, or waived with a reason) is a one-line fix.  The
+``reprolint`` metric-tracking checker enforces the same invariant
+statically at the bench call sites — both read the literal tables below,
+so source and CI can never disagree on what is tracked.
 """
 
 from __future__ import annotations
@@ -24,29 +32,92 @@ from __future__ import annotations
 import argparse
 import json
 
-#: (suite, metric) pairs tracked across commits; lower is better for all
-TRACKED = (
-    ("batched_sweep", "sweep64_jax_cached_s"),
-    ("batched_sweep", "sweep64_numpy_s"),
-    ("batched_sweep", "sweep64_numpy_cached_s"),
-    ("batched_sweep", "sweep_batched_s"),
-    ("batched_sweep", "grid_s"),
-    ("contractions", "tc_rank64_suite_s"),
-    ("contractions", "tc_rank64_rank_numpy_s"),
-    ("contractions", "tc_rank64_rank_jax_s"),
-    ("contractions", "tc_sweep_suite_s"),
-    ("contractions", "tc_sweep_rank_jax_s"),
-    ("einsum_paths", "tc_chain_suite_s"),
-    ("einsum_paths", "tc_chain_rank_numpy_s"),
-    ("einsum_paths", "tc_chain_rank_jax_s"),
-    ("serving", "serve_p99_ms"),
-    ("serving", "serve_tick_overhead_ms"),
-    ("serving", "serve_goodput_tok_s"),
+#: (suite, metric, higher_better) triples trended across commits — the
+#: declarative heart of the smoke lane.  ``higher_better`` inverts the
+#: comparison ratio (a drop below 1/threshold warns).  reprolint's
+#: metric-tracking checker parses this literal, so keep it constants-only.
+METRICS = (
+    ("batched_sweep", "sweep64_jax_cached_s", False),
+    ("batched_sweep", "sweep64_numpy_s", False),
+    ("batched_sweep", "sweep64_numpy_cached_s", False),
+    ("batched_sweep", "sweep_batched_s", False),
+    ("batched_sweep", "grid_s", False),
+    ("contractions", "tc_rank64_suite_s", False),
+    ("contractions", "tc_rank64_rank_numpy_s", False),
+    ("contractions", "tc_rank64_rank_jax_s", False),
+    ("contractions", "tc_sweep_suite_s", False),
+    ("contractions", "tc_sweep_rank_jax_s", False),
+    ("einsum_paths", "tc_chain_suite_s", False),
+    ("einsum_paths", "tc_chain_rank_numpy_s", False),
+    ("einsum_paths", "tc_chain_rank_jax_s", False),
+    ("serving", "serve_p99_ms", False),
+    ("serving", "serve_tick_overhead_ms", False),
+    ("serving", "serve_goodput_tok_s", True),
 )
 
-#: tracked metrics where HIGHER is better (the comparison ratio inverts:
-#: a drop below 1/threshold warns)
-HIGHER_BETTER = frozenset({("serving", "serve_goodput_tok_s")})
+#: (suite, metric) pairs a smoke bench emits that CI deliberately does
+#: NOT trend — each group states why.  An emitted metric in neither
+#: table fails the lane (see :func:`check_tracking`).
+UNTRACKED = (
+    # problem-shape descriptors: constants unless the bench is edited
+    ("batched_sweep", "n"),
+    ("batched_sweep", "grid_size"),
+    ("batched_sweep", "grid_configs"),
+    ("contractions", "tc_rank64_algorithms"),
+    ("contractions", "tc_rank64_batched_algorithms"),
+    ("contractions", "tc_rank64_benchmarks"),
+    ("contractions", "tc_sweep_points"),
+    ("contractions", "tc_sweep_benchmarks"),
+    ("contractions", "tc_sweep_new_benchmarks"),
+    ("einsum_paths", "tc_chain_paths"),
+    ("einsum_paths", "tc_chain_steps"),
+    ("einsum_paths", "tc_chain_benchmarks"),
+    ("einsum_paths", "tc_sweep_chain_points"),
+    ("einsum_paths", "tc_sweep_chain_new_benchmarks"),
+    # correctness booleans: the tier-1 tests already hard-pin these;
+    # trending a 0/1 across commits adds nothing
+    ("batched_sweep", "argmin_agree"),
+    ("batched_sweep", "rank_order_agree"),
+    ("batched_sweep", "sweep64_jax_beats_numpy"),
+    ("contractions", "tc_rank64_backend_agree"),
+    ("contractions", "tc_rank64_oracle_agree"),
+    ("einsum_paths", "tc_chain_backend_agree"),
+    ("einsum_paths", "tc_chain_oracle_agree"),
+    # numerical-agreement magnitudes: bounded by in-bench assertions
+    ("batched_sweep", "max_rel_diff"),
+    ("batched_sweep", "max_rel_backend_diff"),
+    ("batched_sweep", "max_rel_fused_diff"),
+    # scalar-path / one-shot reference timings and derived speedups: the
+    # slow side of a ratio whose fast side is already trended above
+    ("batched_sweep", "sweep_scalar_s"),
+    ("batched_sweep", "sweep_speedup"),
+    ("batched_sweep", "rank_scalar_s"),
+    ("batched_sweep", "rank_batched_s"),
+    ("batched_sweep", "sweep64_jax_grouped_s"),
+    ("batched_sweep", "sweep64_fused_speedup"),
+    ("batched_sweep", "sweep64_speedup"),
+    # single-execution denominators and their cost fractions: one real
+    # kernel execution each — too noisy on shared runners to trend
+    ("contractions", "tc_rank64_exec_s"),
+    ("contractions", "tc_rank64_cost_frac"),
+    ("contractions", "tc_sweep_cost_frac"),
+    ("einsum_paths", "tc_chain_exec_s"),
+    ("einsum_paths", "tc_chain_cost_frac"),
+    ("einsum_paths", "tc_sweep_chain_suite_s"),
+    ("einsum_paths", "tc_sweep_chain_cost_frac"),
+    # serving: FIFO-baseline percentiles and ratios — the guided/FIFO
+    # comparison is already enforced by SERVING_RATIOS
+    ("serving", "serve_model_build_s"),
+    ("serving", "serve_p50_ms"),
+    ("serving", "serve_fifo_p50_ms"),
+    ("serving", "serve_fifo_p99_ms"),
+    ("serving", "serve_goodput_ratio"),
+    ("serving", "serve_p99_ratio"),
+)
+
+#: derived views used by the comparison code below (and by older callers)
+TRACKED = tuple((s, m) for s, m, _ in METRICS)
+HIGHER_BETTER = frozenset((s, m) for s, m, hb in METRICS if hb)
 
 #: (suite, guided metric, baseline metric) pairs checked WITHIN one
 #: artifact: the model-guided scheduler falling below its FIFO baseline
@@ -142,6 +213,30 @@ def check_serving_ratios(curr: dict) -> int:
     return flagged
 
 
+def check_tracking(curr: dict) -> int:
+    """HARD check: every metric in the artifact is in METRICS/UNTRACKED.
+
+    Returns the number of unknown metrics (the only condition that fails
+    the smoke lane — unlike timings it is deterministic, and the fix is
+    a one-line table entry here).  Ratio-table metric names also count
+    as known: they are consumed within one artifact, not trended.
+    """
+    known = set(TRACKED) | set(UNTRACKED)
+    for suite, a, b in BACKEND_RATIOS + SERVING_RATIOS:
+        known.update({(suite, a), (suite, b)})
+    unknown = 0
+    for suite, payload in curr.get("suites", {}).items():
+        for name in payload.get("metrics", {}):
+            if (suite, name) not in known:
+                unknown += 1
+                print(f"::error title=untracked smoke metric::"
+                      f"{suite}.{name} is emitted but appears in neither "
+                      f"METRICS nor UNTRACKED in benchmarks/"
+                      f"compare_smoke.py — add it (trended, or waived "
+                      f"with a reason)")
+    return unknown
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("previous",
@@ -177,6 +272,9 @@ def main() -> None:
     flagged += check_serving_ratios(curr)
     print(f"{flagged} regression(s) flagged" if flagged
           else "no regressions flagged")
+    unknown = check_tracking(curr)
+    if unknown:
+        raise SystemExit(f"{unknown} untracked smoke metric(s)")
 
 
 if __name__ == "__main__":

@@ -23,8 +23,8 @@ import numpy as np                                          # noqa: E402
 
 from repro.core.contractions import (ContractionSpec,       # noqa: E402
                                      execute)
-from repro.tc import (is_batched_kernel,                    # noqa: E402
-                      rank_contraction_sweep)
+from repro.tc import (PredictorSession,                     # noqa: E402
+                      is_batched_kernel)
 
 
 def main():
@@ -39,13 +39,14 @@ def main():
     grid = [dict(b=b, i=n, j=n, k=n) for b in (4, 8, 16)]
 
     # rank the first point, snapshot the suite, then extend to the whole
-    # grid ON THE SAME SUITE: already-measured signatures re-predict free,
-    # so the snapshot diff is exactly what the extra points cost
+    # grid ON THE SAME SESSION: its suite re-predicts already-measured
+    # signatures free, so the snapshot diff is what the extra points cost
+    sess = PredictorSession(repetitions=3)
     t0 = time.perf_counter()
-    first = rank_contraction_sweep(spec, grid[:1], repetitions=3)
-    suite, cache = first.suite, first.cache
+    sess.rank_contraction_sweep(spec, grid[:1])
+    suite = sess.suite
     first_point = suite.counters()
-    sweep = rank_contraction_sweep(spec, grid, suite=suite, cache=cache)
+    sweep = sess.rank_contraction_sweep(spec, grid)
     t_sweep = time.perf_counter() - t0
     extra = suite.n_benchmarks - int(first_point["n_benchmarks"])
     print(f"== {spec.einsum_expr()} across b={[g['b'] for g in grid]} "

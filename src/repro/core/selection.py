@@ -281,6 +281,9 @@ def select_einsum_path(chain, sizes: Mapping[str, int], *,
     composed total-runtime prediction.  Same keywords (and the same
     deprecations) as :func:`rank_einsum_paths`.
     """
+    # shim plumbing: forwards the caller's own (possibly deprecated)
+    # kwargs verbatim so the deprecation warning fires exactly once
+    # reprolint: allow[deprecated-kwarg]
     return rank_einsum_paths(chain, sizes, stat=stat, backend=backend,
                              repetitions=repetitions,
                              predictor=predictor, session=session)[0]

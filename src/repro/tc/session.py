@@ -182,6 +182,9 @@ class PredictorSession:
         """Size-sweep autotuning on this session's shared suite: only
         genuinely new (equation, shapes, cache-class) keys are measured
         across the grid."""
+        # the sanctioned delegation site: the session IS the owner these
+        # kwargs were deprecated in favor of
+        # reprolint: allow[deprecated-kwarg]
         return rank_contraction_sweep(
             spec, sizes_grid, stat=stat, backend=self.backend,
             algorithms=algorithms, include_batched=include_batched,
@@ -220,6 +223,9 @@ class PredictorSession:
                           memory_limit_bytes: Optional[int] = None,
                           ) -> ChainSizeSweep:
         """Chain-level size sweep from this session's shared suite."""
+        # the sanctioned delegation site: the session IS the owner these
+        # kwargs were deprecated in favor of
+        # reprolint: allow[deprecated-kwarg]
         return rank_einsum_sweep(
             chain, sizes_grid, stat=stat, backend=self.backend,
             suite=self.suite, cache=self.cache,

@@ -89,6 +89,9 @@ def train(cfg: ArchConfig, data_cfg: DataConfig, tc: TrainConfig,
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         t0 = time.perf_counter()
         new_params, new_opt_state, loss = step_fn(params, opt_state, batch)
+        # the NaN circuit breaker and straggler watchdog both need the
+        # per-step loss and wall time on the host before the next step
+        # reprolint: allow[host-sync]
         loss = float(jax.block_until_ready(loss))
         dt = time.perf_counter() - t0
         if np.isnan(loss) or np.isinf(loss):

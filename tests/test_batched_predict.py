@@ -14,7 +14,8 @@ import pytest
 from repro.core import (Domain, KernelCall, ModelSet, PerformanceModel,
                         Piece, PredictionEngine, compile_calls, fit_relative,
                         monomial_basis, optimize_algorithm_and_block_size,
-                        optimize_block_size, predict_runtime, rank_algorithms)
+                        optimize_block_size, predict_runtime, rank_algorithms,
+                        select_algorithm)
 from repro.core.sampler import STATS, Stats
 
 
@@ -158,6 +159,20 @@ def test_rank_algorithms_batched_matches_scalar():
         for g, r in zip(got, ref):
             assert _rel_close(getattr(g.runtime, stat),
                               getattr(r.runtime, stat))
+
+
+def test_select_algorithm_matches_scalar_oracle():
+    """select_algorithm's batched winner equals the scalar-path oracle's
+    (batched=False) and both equal rank_algorithms' top entry."""
+    rng = np.random.default_rng(7)
+    ms = ModelSet({"fast": _random_model(rng, "fast"),
+                   "slow": _random_model(rng, "slow")})
+    tracers = {"a": _tracer_for("slow"), "b": _tracer_for("fast"),
+               "c": _tracer_for("slow", calls_per_iter=5)}
+    got = select_algorithm(tracers, ms, 512, 64)
+    ref = select_algorithm(tracers, ms, 512, 64, batched=False)
+    assert got == ref
+    assert got == rank_algorithms(tracers, ms, 512, 64)[0].name
 
 
 def test_block_size_sweep_identical_and_10x_faster():

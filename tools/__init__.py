@@ -1,0 +1,2 @@
+"""Repo tooling: docs lint (``check_docs``) and the ``tools.lint``
+static-analysis gate (reprolint)."""

@@ -32,12 +32,17 @@ otherwise.  The CI fast lane runs this after the tests, and
 from __future__ import annotations
 
 import argparse
+import ast
 import re
 import sys
 from pathlib import Path
 from typing import Dict, List, Tuple
 
 ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))                    # for the tools.lint import
+
+from tools.lint.checkers.deprecated_kwargs import (      # noqa: E402
+    deprecated_call_findings)
 
 
 def _rel(path: Path) -> str:
@@ -54,20 +59,6 @@ _WIKI_LINK = re.compile(r"(?<!\[)\[\[([A-Za-z0-9._-]+)\]\](?!\])")
 _HEADING = re.compile(r"^#{1,6}\s+(.*)$")
 _FENCE = re.compile(r"^```(\w*)\s*$")
 _SKIP_MARK = "<!-- docs-check: skip -->"
-
-#: entry points whose per-call resource kwargs the PredictorSession
-#: redesign deprecated, and the kwargs that must not appear in any doc
-#: snippet calling them
-_DEPRECATED_KWARGS = {
-    "rank_contraction_algorithms": ("suite", "cache", "backend",
-                                    "repetitions", "sizes_grid"),
-    "select_contraction_algorithm": ("backend", "repetitions", "predictor"),
-    "rank_einsum_paths": ("suite", "cache", "backend", "repetitions",
-                          "sizes_grid", "predictor"),
-    "select_einsum_path": ("backend", "repetitions", "predictor"),
-    "rank_contraction_sweep": ("suite", "cache", "backend", "repetitions"),
-    "rank_einsum_sweep": ("suite", "cache", "backend", "repetitions"),
-}
 
 
 def doc_files(explicit: List[str]) -> List[Path]:
@@ -158,38 +149,24 @@ def check_wiki_links(path: Path) -> List[str]:
     return problems
 
 
-def _call_spans(src: str, fn: str) -> List[str]:
-    """The argument text of every ``fn(...)`` call in a snippet
-    (paren-walking, so multi-line calls are covered)."""
-    spans = []
-    for m in re.finditer(rf"(?<![\w.]){fn}\s*\(", src):
-        depth, i = 1, m.end()
-        while i < len(src) and depth:
-            depth += {"(": 1, ")": -1}.get(src[i], 0)
-            i += 1
-        spans.append(src[m.end():i - 1])
-    return spans
-
-
 def check_deprecated_kwargs(path: Path) -> List[str]:
     """Doc snippets calling legacy entry points with deprecated kwargs.
 
     The shims keep the old forms *working* for one release, but docs are
     what readers copy — they must demonstrate the
-    ``repro.tc.PredictorSession`` spelling exclusively.
+    ``repro.tc.PredictorSession`` spelling exclusively.  The rule itself
+    lives in ``tools/lint/checkers/deprecated_kwargs.py`` (reprolint's
+    deprecated-kwarg checker) so docs and source share one definition.
     """
     problems = []
     for start, src in snippets_of(path):
-        for fn, kwargs in _DEPRECATED_KWARGS.items():
-            for span in _call_spans(src, fn):
-                used = [k for k in kwargs
-                        if re.search(rf"(?<![\w]){k}\s*=", span)]
-                if used:
-                    problems.append(
-                        f"{_rel(path)}:{start}: snippet calls {fn}() with "
-                        f"deprecated kwarg(s) "
-                        f"{', '.join(k + '=' for k in used)} — use a "
-                        f"repro.tc.PredictorSession instead")
+        try:
+            tree = ast.parse(src)
+        except SyntaxError:
+            continue                 # run_snippets reports the real error
+        ast.increment_lineno(tree, start)   # anchor into the .md file
+        for f in deprecated_call_findings(tree, _rel(path)):
+            problems.append(f"{f.path}:{f.line}: snippet: {f.message}")
     return problems
 
 

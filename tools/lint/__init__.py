@@ -1,0 +1,35 @@
+"""reprolint — AST-based invariant checks for the prediction stack.
+
+The ROADMAP carries a set of cross-cutting constraints in prose: hot
+paths stay fused and dispatch-free (no stray host syncs), jit call sites
+declare their Python-config parameters static (no silent retraces), every
+ranking entry point goes through :class:`repro.tc.PredictorSession`
+(no resurrected per-call kwargs), every prediction fast path is pinned to
+its equivalence oracle by a test, and every smoke metric the benchmarks
+emit is either tracked across commits or explicitly allowlisted.  Each of
+those used to be a reviewer checklist item; ``reprolint`` makes them a
+CI gate checked once per commit.
+
+Usage::
+
+    python -m tools.lint [paths...] [--format text|json|github]
+    python -m tools.lint --write-baseline   # grandfather current findings
+
+Architecture: :mod:`tools.lint.core` holds the finding model, the
+``# reprolint: allow[checker-id]`` pragma machinery, the committed
+baseline, and the runner; each module under :mod:`tools.lint.checkers`
+registers one :class:`~tools.lint.core.Checker` (per-file AST visitors,
+or repo-level cross-reference checks).  ``docs/static-analysis.md``
+documents every checker and the invariant it encodes.
+"""
+
+from .core import (Checker, FileContext, Finding, LintResult, REGISTRY,
+                   load_baseline, run_lint, write_baseline)
+
+# importing the subpackage registers every checker with the REGISTRY
+from . import checkers  # noqa: F401  (import for side effect)
+
+__all__ = [
+    "Checker", "FileContext", "Finding", "LintResult", "REGISTRY",
+    "load_baseline", "run_lint", "write_baseline",
+]

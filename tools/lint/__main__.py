@@ -1,0 +1,98 @@
+"""CLI for reprolint: ``python -m tools.lint [paths...]``.
+
+Exit code 1 when any active (non-baselined, non-suppressed) finding
+remains — CI runs this as a hard gate before the test lane.  ``--format
+github`` renders findings as ``::error`` workflow annotations so they
+land on the PR diff; ``--write-baseline`` grandfathers the current
+finding set into ``tools/lint/baseline.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from . import REGISTRY, load_baseline, run_lint, write_baseline
+from .core import BASELINE_PATH, ROOT
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="AST-based invariant checker for the prediction stack")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: src, benchmarks, "
+                         "examples + docs snippets)")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated checker ids to run "
+                         "(default: all)")
+    ap.add_argument("--baseline", default=str(BASELINE_PATH),
+                    help="baseline file of grandfathered findings "
+                         "('-' to ignore)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline with the current active "
+                         "findings and exit 0")
+    ap.add_argument("--list-checkers", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_checkers:
+        for cid in sorted(REGISTRY):
+            print(f"{cid:18s} {REGISTRY[cid].description}")
+        return 0
+
+    checkers = None
+    if args.select:
+        checkers = [c.strip() for c in args.select.split(",") if c.strip()]
+        unknown = [c for c in checkers if c not in REGISTRY]
+        if unknown:
+            ap.error(f"unknown checker(s): {', '.join(unknown)} "
+                     f"(have: {', '.join(sorted(REGISTRY))})")
+
+    missing = [p for p in args.paths if not Path(p).exists()]
+    if missing:
+        ap.error(f"no such file or directory: {', '.join(missing)}")
+
+    baseline_path = None if args.baseline == "-" else Path(args.baseline)
+    t0 = time.perf_counter()
+    result = run_lint(
+        ROOT,
+        paths=[Path(p) for p in args.paths] or None,
+        checkers=checkers,
+        baseline=load_baseline(baseline_path) if baseline_path else None,
+    )
+    elapsed = time.perf_counter() - t0
+
+    if args.write_baseline:
+        path = baseline_path or BASELINE_PATH
+        write_baseline(result.findings, path)
+        print(f"wrote {len(result.findings)} finding(s) to {path}")
+        return 0
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [f.__dict__ for f in result.findings],
+            "baselined": [f.__dict__ for f in result.baselined],
+            "suppressed": result.suppressed,
+            "files": result.files,
+            "seconds": round(elapsed, 3),
+        }, indent=2))
+    else:
+        for f in result.findings:
+            print(f.render_github() if args.format == "github"
+                  else f.render())
+        status = "ok" if result.ok else \
+            f"{len(result.findings)} finding(s)"
+        print(f"reprolint: {status} ({result.files} files, "
+              f"{result.suppressed} pragma-suppressed, "
+              f"{len(result.baselined)} baselined, {elapsed:.2f}s)",
+              file=sys.stderr)
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

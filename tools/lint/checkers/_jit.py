@@ -1,0 +1,147 @@
+"""Shared jit-site analysis for the host-sync and retrace checkers.
+
+Recognized jit spellings (all present in this repo):
+
+* ``@jax.jit`` / ``@jit`` decorators,
+* ``@functools.partial(jax.jit, static_argnames=...)`` decorators,
+* call sites ``jax.jit(fn, ...)`` / ``jax.jit(lambda ...: ...)`` where
+  ``fn`` resolves to a ``def`` in the same module.
+
+A :class:`JitSite` carries the target function node (or lambda), the
+declared static argument names, and the anchor line — enough for the
+host-sync checker to treat the body as a hot context and for the retrace
+checker to cross-check parameters against ``static_argnames``.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+def is_jit_name(node: ast.AST) -> bool:
+    """``jax.jit`` / bare ``jit`` (imported name), as an expression."""
+    return (isinstance(node, ast.Attribute) and node.attr == "jit") or \
+        (isinstance(node, ast.Name) and node.id == "jit")
+
+
+def _partial_of_jit(call: ast.Call) -> bool:
+    """``functools.partial(jax.jit, ...)`` / ``partial(jit, ...)``."""
+    f = call.func
+    is_partial = (isinstance(f, ast.Attribute) and f.attr == "partial") or \
+        (isinstance(f, ast.Name) and f.id == "partial")
+    return is_partial and bool(call.args) and is_jit_name(call.args[0])
+
+
+def jit_decorator(node: ast.expr) -> Optional[ast.Call]:
+    """If ``node`` is a jit decorator, the Call carrying its kwargs
+    (``None`` for the bare ``@jax.jit`` form, which has none)."""
+    if is_jit_name(node):
+        return None
+    if isinstance(node, ast.Call) and (_partial_of_jit(node) or
+                                       is_jit_name(node.func)):
+        return node
+    return None
+
+
+def is_jit_decorated(fn: Union[ast.FunctionDef, ast.AsyncFunctionDef],
+                     ) -> bool:
+    return any(is_jit_name(d) or
+               (isinstance(d, ast.Call) and
+                (_partial_of_jit(d) or is_jit_name(d.func)))
+               for d in fn.decorator_list)
+
+
+def static_names_of(call: Optional[ast.Call],
+                    fn: Optional[FunctionNode]) -> Set[str]:
+    """The parameter names a jit call declares static.
+
+    Handles ``static_argnames=`` (str or tuple/list of str) and
+    ``static_argnums=`` (int or tuple/list of int, resolved against the
+    target's positional parameters when known).
+    """
+    out: Set[str] = set()
+    if call is None:
+        return out
+    pos_params: List[str] = []
+    if fn is not None and not isinstance(fn, ast.Lambda):
+        pos_params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    elif isinstance(fn, ast.Lambda):
+        pos_params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                out.update(e.value for e in v.elts
+                           if isinstance(e, ast.Constant)
+                           and isinstance(e.value, str))
+        elif kw.arg == "static_argnums":
+            v = kw.value
+            nums: List[int] = []
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                nums = [v.value]
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                nums = [e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)]
+            out.update(pos_params[n] for n in nums if n < len(pos_params))
+    return out
+
+
+@dataclass
+class JitSite:
+    """One jit application: target body + declared static params."""
+
+    fn: FunctionNode                      # the jitted function / lambda
+    static: Set[str] = field(default_factory=set)
+    line: int = 0                         # anchor for findings
+    form: str = "decorator"               # decorator | call | lambda
+
+    @property
+    def params(self) -> List[ast.arg]:
+        a = self.fn.args
+        return list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+
+
+def collect_jit_sites(tree: ast.AST) -> List[JitSite]:
+    """Every jit application whose target body is visible in ``tree``."""
+    defs: Dict[str, ast.FunctionDef] = {}
+    lambdas_by_def: Dict[str, ast.Lambda] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # innermost wins is fine: jit targets are module/closure-local
+            defs.setdefault(node.name, node)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                isinstance(node.value, ast.Lambda):
+            lambdas_by_def.setdefault(node.targets[0].id, node.value)
+
+    sites: List[JitSite] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                call = jit_decorator(dec)
+                if call is not None or is_jit_name(dec):
+                    sites.append(JitSite(
+                        fn=node, static=static_names_of(call, node),
+                        line=node.lineno, form="decorator"))
+                    break
+        elif isinstance(node, ast.Call) and is_jit_name(node.func) and \
+                node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Lambda):
+                sites.append(JitSite(
+                    fn=target, static=static_names_of(node, target),
+                    line=target.lineno, form="lambda"))
+            elif isinstance(target, ast.Name):
+                fn = defs.get(target.id) or lambdas_by_def.get(target.id)
+                if fn is not None:
+                    sites.append(JitSite(
+                        fn=fn, static=static_names_of(node, fn),
+                        line=node.lineno, form="call"))
+    return sites

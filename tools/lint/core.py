@@ -1,0 +1,308 @@
+"""reprolint core: finding model, pragmas, baseline, and the runner.
+
+Everything here is stdlib-only (``ast`` + ``json`` + ``re``): the linter
+must run in the CI fast lane before anything is installed beyond the
+repo itself, and must never import ``repro`` (importing jax to lint a
+file would cost more than the whole lint run's < 10 s budget).
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from collections import Counter
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: repository root (tools/lint/core.py -> repo)
+ROOT = Path(__file__).resolve().parents[2]
+
+#: the directories the default lint sweep covers, plus docs snippets
+DEFAULT_CODE_DIRS = ("src", "benchmarks", "examples")
+
+#: ``# reprolint: allow[checker-id]`` (comma list or ``*``), with an
+#: optional justification after the bracket — the pragma that suppresses
+#: a finding on its own line or the line directly below the pragma
+PRAGMA = re.compile(r"#\s*reprolint:\s*allow\[([A-Za-z0-9_*,\s-]+)\]")
+
+#: ``# reprolint: hot-path`` marks a function as a dispatch-free hot
+#: context for the host-sync checker (files outside the built-in table)
+HOT_MARK = re.compile(r"#\s*reprolint:\s*hot-path")
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+_SKIP_MARK = "<!-- docs-check: skip -->"
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding, anchored at a repo-relative ``path:line``."""
+
+    checker: str
+    path: str
+    line: int
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: line numbers drift across edits, so a
+        grandfathered finding is matched by (checker, path, message)."""
+        return (self.checker, self.path, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.checker}] {self.message}"
+
+    def render_github(self) -> str:
+        """GitHub Actions annotation format (shows inline on the PR)."""
+        return (f"::error file={self.path},line={self.line},"
+                f"title=reprolint {self.checker}::{self.message}")
+
+
+class FileContext:
+    """One parsed python source: a file, or one docs snippet.
+
+    ``rel`` is the repo-relative path reported in findings (for a
+    markdown snippet: the ``.md`` file).  ``first_line`` offsets the AST
+    line numbers so snippet findings anchor into the markdown file.
+    """
+
+    def __init__(self, rel: str, source: str, *, first_line: int = 1):
+        self.rel = rel
+        self.source = source
+        self.first_line = first_line
+        self.tree = ast.parse(source)
+        if first_line != 1:
+            ast.increment_lineno(self.tree, first_line - 1)
+        self.pragmas: Dict[int, Set[str]] = {}
+        self.hot_marks: Set[int] = set()
+        for ln, text in enumerate(source.splitlines(), first_line):
+            m = PRAGMA.search(text)
+            if m:
+                self.pragmas[ln] = {s.strip() for s in m.group(1).split(",")
+                                    if s.strip()}
+            if HOT_MARK.search(text):
+                self.hot_marks.add(ln)
+
+    @classmethod
+    def from_file(cls, path: Path, root: Path = ROOT) -> "FileContext":
+        rel = path.resolve().relative_to(root).as_posix()
+        return cls(rel, path.read_text())
+
+    def allowed(self, checker: str, line: int) -> bool:
+        """Is a ``checker`` finding at ``line`` pragma-suppressed?  The
+        pragma covers its own line (trailing comment) or the line below
+        (standalone comment above the flagged statement)."""
+        for ln in (line, line - 1):
+            ids = self.pragmas.get(ln)
+            if ids and (checker in ids or "*" in ids):
+                return True
+        return False
+
+    def is_hot_marked(self, line: int) -> bool:
+        """Is there a ``# reprolint: hot-path`` marker on the ``def``
+        line or the line above it?"""
+        return bool(self.hot_marks & {line, line - 1})
+
+
+class Checker:
+    """Base class: subclass, set ``id``/``description``, register.
+
+    ``check_file`` runs once per parsed source (including docs
+    snippets); ``check_repo`` runs once over the whole context set for
+    cross-file invariants (oracle coverage, metric tracking).  Findings
+    are yielded raw — pragma suppression and the baseline are applied by
+    the runner, so checkers stay pure syntax -> findings functions.
+    """
+
+    id: str = ""
+    description: str = ""
+
+    def check_file(self, ctx: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def check_repo(self, ctxs: Sequence[FileContext],
+                   root: Path) -> Iterable[Finding]:
+        return ()
+
+
+#: checker-id -> instance; populated by :func:`register` at import time
+REGISTRY: Dict[str, Checker] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the global registry."""
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"{cls.__name__} has no checker id")
+    if inst.id in REGISTRY:
+        raise ValueError(f"duplicate checker id {inst.id!r}")
+    REGISTRY[inst.id] = inst
+    return cls
+
+
+# ------------------------------------------------------------- collection --
+
+def iter_source_files(root: Path, paths: Optional[Sequence[Path]] = None,
+                      ) -> List[Path]:
+    """The ``.py`` files to lint: an explicit list, or the default
+    ``src/`` + ``benchmarks/`` + ``examples/`` sweep."""
+    if paths:
+        out: List[Path] = []
+        for p in paths:
+            p = Path(p)
+            if p.is_dir():
+                out.extend(sorted(p.rglob("*.py")))
+            else:
+                out.append(p)
+        return [p for p in out if "__pycache__" not in p.parts]
+    files: List[Path] = []
+    for d in DEFAULT_CODE_DIRS:
+        base = root / d
+        if base.is_dir():
+            files.extend(sorted(base.rglob("*.py")))
+    return [p for p in files if "__pycache__" not in p.parts]
+
+
+def python_snippets(path: Path) -> List[Tuple[int, str]]:
+    """(first line, source) of every runnable ```` ```python ```` block
+    in a markdown file — the same extraction ``tools/check_docs.py``
+    executes, minus skip-marked blocks (pseudocode is not linted)."""
+    out: List[Tuple[int, str]] = []
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang = m.group(1)
+        skip = i > 0 and _SKIP_MARK in lines[i - 1]
+        start = i + 2                      # 1-based line after the fence
+        i += 1
+        block: List[str] = []
+        while i < len(lines) and not _FENCE.match(lines[i]):
+            block.append(lines[i])
+            i += 1
+        i += 1                             # closing fence
+        if lang == "python" and not skip:
+            out.append((start, "\n".join(block)))
+    return out
+
+
+def doc_files(root: Path) -> List[Path]:
+    files = sorted((root / "docs").glob("*.md"))
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    return files
+
+
+def build_contexts(root: Path, paths: Optional[Sequence[Path]] = None,
+                   *, include_docs: bool = True,
+                   ) -> Tuple[List[FileContext], List[Finding]]:
+    """Parse every lintable source; unparsable files become findings
+    (checker id ``parse``) instead of crashing the run."""
+    ctxs: List[FileContext] = []
+    problems: List[Finding] = []
+    for path in iter_source_files(root, paths):
+        rel = path.resolve().relative_to(root).as_posix() \
+            if path.resolve().is_relative_to(root) else str(path)
+        try:
+            ctxs.append(FileContext(rel, path.read_text()))
+        except SyntaxError as e:
+            problems.append(Finding("parse", rel, e.lineno or 1,
+                                    f"does not parse: {e.msg}"))
+    if include_docs and not paths:
+        for md in doc_files(root):
+            rel = md.resolve().relative_to(root).as_posix()
+            for start, src in python_snippets(md):
+                try:
+                    ctxs.append(FileContext(rel, src, first_line=start))
+                except SyntaxError as e:
+                    problems.append(Finding(
+                        "parse", rel, start + (e.lineno or 1) - 1,
+                        f"snippet does not parse: {e.msg}"))
+    return ctxs, problems
+
+
+# --------------------------------------------------------------- baseline --
+
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+
+
+def load_baseline(path: Path = BASELINE_PATH) -> Counter:
+    """Multiset of grandfathered finding keys (empty if no file)."""
+    if not path.exists():
+        return Counter()
+    data = json.loads(path.read_text())
+    return Counter((f["checker"], f["path"], f["message"])
+                   for f in data.get("findings", []))
+
+
+def write_baseline(findings: Sequence[Finding],
+                   path: Path = BASELINE_PATH) -> None:
+    """Grandfather the given findings (sorted, line-number-free)."""
+    entries = sorted(({"checker": f.checker, "path": f.path,
+                       "message": f.message} for f in findings),
+                     key=lambda e: (e["path"], e["checker"], e["message"]))
+    path.write_text(json.dumps(
+        {"comment": "grandfathered reprolint findings; regenerate with "
+                    "`python -m tools.lint --write-baseline`",
+         "findings": entries}, indent=2) + "\n")
+
+
+# ----------------------------------------------------------------- runner --
+
+@dataclass
+class LintResult:
+    """Outcome of one lint run."""
+
+    findings: List[Finding]            # active (fail the gate)
+    baselined: List[Finding]           # matched the committed baseline
+    suppressed: int                    # pragma-suppressed count
+    files: int                         # sources linted (incl. snippets)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def run_lint(root: Path = ROOT, *,
+             paths: Optional[Sequence[Path]] = None,
+             checkers: Optional[Sequence[str]] = None,
+             baseline: Optional[Counter] = None,
+             include_docs: bool = True) -> LintResult:
+    """Run the registered checkers; apply pragmas, then the baseline."""
+    ctxs, raw = build_contexts(root, paths, include_docs=include_docs)
+    selected = [REGISTRY[c] for c in checkers] if checkers \
+        else list(REGISTRY.values())
+    by_rel = {c.rel: c for c in ctxs if c.first_line == 1}
+    for checker in selected:
+        for ctx in ctxs:
+            raw.extend(checker.check_file(ctx))
+        raw.extend(checker.check_repo(ctxs, root))
+    findings: List[Finding] = []
+    suppressed = 0
+    for f in raw:
+        ctx = by_rel.get(f.path)
+        snippet_ctxs = [c for c in ctxs
+                        if c.rel == f.path and c.first_line > 1]
+        allowed = (ctx is not None and ctx.allowed(f.checker, f.line)) or \
+            any(c.allowed(f.checker, f.line) for c in snippet_ctxs)
+        if allowed:
+            suppressed += 1
+        else:
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.checker))
+    base = load_baseline() if baseline is None else baseline
+    remaining = Counter(base)
+    active: List[Finding] = []
+    grandfathered: List[Finding] = []
+    for f in findings:
+        if remaining.get(f.key(), 0) > 0:
+            remaining[f.key()] -= 1
+            grandfathered.append(f)
+        else:
+            active.append(f)
+    return LintResult(findings=active, baselined=grandfathered,
+                      suppressed=suppressed, files=len(ctxs))
