@@ -53,6 +53,8 @@ METRICS = (
     ("serving", "serve_p99_ms", False),
     ("serving", "serve_tick_overhead_ms", False),
     ("serving", "serve_goodput_tok_s", True),
+    ("model_store", "store_warmstart_ms", False),
+    ("model_store", "tournament_rank_agreement", True),
 )
 
 #: (suite, metric) pairs a smoke bench emits that CI deliberately does
@@ -113,6 +115,26 @@ UNTRACKED = (
     ("serving", "serve_fifo_p99_ms"),
     ("serving", "serve_goodput_ratio"),
     ("serving", "serve_p99_ratio"),
+    # model store: shape descriptors and invariants the bench itself (or
+    # tier-1 tests) already pin hard — zero new measurements and
+    # bit-identical rankings fail the bench, not a trend line
+    ("model_store", "store_keys"),
+    ("model_store", "store_bytes"),
+    ("model_store", "store_measure_s"),
+    ("model_store", "store_save_ms"),
+    ("model_store", "store_new_measurements"),
+    ("model_store", "store_roundtrip_identical"),
+    ("model_store", "store_drift_probed"),
+    # drift ratio and prev-run fingerprint hit: shared-runner facts
+    # (thermal wobble, runner-image rotation), informative but untrendable
+    ("model_store", "store_drift_max_ratio"),
+    ("model_store", "store_prev_hit"),
+    # tournament: snapshot count is a constant; the winner's secondary
+    # scores back up the trended rank_agreement headline
+    ("model_store", "tournament_snapshots"),
+    ("model_store", "tournament_top1_rate"),
+    ("model_store", "tournament_rel_err"),
+    ("model_store", "tournament_oracle_cost_s"),
 )
 
 #: derived views used by the comparison code below (and by older callers)

@@ -22,7 +22,7 @@ import traceback
 
 from . import (bench_algorithm_selection, bench_batched_sweep,
                bench_blocksize, bench_cache_effects, bench_contractions,
-               bench_einsum_paths, bench_model_accuracy,
+               bench_einsum_paths, bench_model_accuracy, bench_model_store,
                bench_prediction_accuracy, bench_roofline, bench_serving,
                bench_tile_tuner, common)
 
@@ -45,6 +45,8 @@ SUITES = {
                      "beyond-paper: einsum-path (chain) prediction"),
     "serving": (bench_serving,
                 "beyond-paper: model-guided serving vs FIFO baseline"),
+    "model_store": (bench_model_store,
+                    "beyond-paper: store warm start, drift, tournament"),
     "tile_tuner": (bench_tile_tuner,
                    "beyond-paper: Pallas BlockSpec tile selection"),
     "roofline": (bench_roofline,
@@ -53,8 +55,10 @@ SUITES = {
 
 #: the CI smoke lane: the measurement-free prediction-path probe, the
 #: (cheap, deduplicated) contraction probes with their tc_rank64_* and
-#: tc_chain_* metrics, and the model-guided-serving probe (serve_*)
-SMOKE_SUITES = ("batched_sweep", "contractions", "einsum_paths", "serving")
+#: tc_chain_* metrics, the model-guided-serving probe (serve_*), and the
+#: model-store warm-start/tournament probe (store_*/tournament_*)
+SMOKE_SUITES = ("batched_sweep", "contractions", "einsum_paths", "serving",
+                "model_store")
 
 
 def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:

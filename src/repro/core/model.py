@@ -24,6 +24,14 @@ from .sampler import STATS
 Case = Tuple  # hashable combination of flag/scalar-class/layout arguments
 
 
+def _freeze(value):
+    """Lists to tuples, recursively: the inverse of a JSON round trip for
+    the hashable nested-tuple cases models are keyed by."""
+    if isinstance(value, list):
+        return tuple(_freeze(v) for v in value)
+    return value
+
+
 # ------------------------------------------------------------ JAX backend --
 
 _JAX_CASE_EVAL = None
@@ -318,7 +326,11 @@ class PerformanceModel:
     def from_dict(d: dict) -> "PerformanceModel":
         m = PerformanceModel(kernel=d["kernel"], setup=d.get("setup", ""))
         for case_entry in d["cases"]:
-            case = tuple(case_entry["case"])
+            # deep-freeze: JSON turns the case's nested tuples (operand
+            # shapes, cache classes in the tc per-signature cases) into
+            # lists, which would neither hash nor compare equal to the
+            # tuples lookups are keyed by
+            case = _freeze(case_entry["case"])
             for p in case_entry["pieces"]:
                 piece = Piece(
                     domain=Domain(tuple(p["lo"]), tuple(p["hi"])),
@@ -326,7 +338,9 @@ class PerformanceModel:
                            for s, pd in p["polys"].items()},
                 )
                 m.add_piece(case, piece)
-        return m
+        # re-finalize: the padded case tensors finalize() emitted before
+        # the save are part of the artifact and must be part of the load
+        return m.finalize()
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
@@ -368,3 +382,26 @@ class ModelSet:
                        *, backend: str = "numpy") -> np.ndarray:
         return self.models[kernel].estimate_batch(case, sizes,
                                                   backend=backend)
+
+    # ---------------------------------------------------------------- io --
+    def to_dict(self) -> dict:
+        return {"models": [self.models[k].to_dict()
+                           for k in sorted(self.models)]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "ModelSet":
+        ms = ModelSet()
+        for entry in d["models"]:
+            # from_dict finalizes each model, so the loaded set's padded
+            # case tensors match what finalize() emitted before the save
+            ms.add(PerformanceModel.from_dict(entry))
+        return ms
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f)
+
+    @staticmethod
+    def load(path: str) -> "ModelSet":
+        with open(path) as f:
+            return ModelSet.from_dict(json.load(f))

@@ -170,6 +170,14 @@ class ContractionPredictor:
         self._benchmarks = benchmarks
         self._call_seqs = seqs
 
+    @property
+    def model_set(self) -> ModelSet:
+        """The finalized per-signature :class:`ModelSet` (prepares on
+        first access) — the artifact a :class:`repro.store.ModelStore`
+        persists alongside the raw measurements."""
+        self.prepare()
+        return self._models
+
     def _trace(self, n: int, i: int) -> Tuple[KernelCall, ...]:
         # Tracer-protocol adapter: the engine's block-size axis generalizes
         # to the candidate index; ``n`` is unused (one fixed size mapping)

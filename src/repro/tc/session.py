@@ -86,9 +86,27 @@ class PredictorSession:
     def __init__(self, *, backend: str = "numpy",
                  suite: Optional[MicroBenchmarkSuite] = None,
                  cache: Optional[TraceCache] = None,
-                 repetitions: Optional[int] = None):
+                 repetitions: Optional[int] = None,
+                 store=None, allow_mismatch: bool = False):
         self.backend = backend
-        self.suite = resolve_suite(suite, repetitions)
+        if store is not None:
+            # warm start from a repro.store.ModelStore (object or path):
+            # the store's measurement protocol builds the suite and every
+            # stored measurement is pre-loaded, so rankings the store
+            # covers need zero new micro-benchmarks.  Lazy import keeps
+            # the dependency arrow store -> tc (never tc -> store at
+            # module load).
+            if suite is not None:
+                raise ValueError(
+                    "pass store= or suite=, not both: a warm-started "
+                    "session builds its suite from the store")
+            from ..store.modelstore import ModelStore
+            if not isinstance(store, ModelStore):
+                store = ModelStore.load(store,
+                                        allow_mismatch=allow_mismatch)
+            self.suite = store.build_suite(repetitions=repetitions)
+        else:
+            self.suite = resolve_suite(suite, repetitions)
         self.cache = cache if cache is not None else TraceCache()
         self._contraction: Dict[Tuple, ContractionPredictor] = {}
         self._chain: Dict[Tuple, ChainPredictor] = {}
@@ -251,6 +269,60 @@ class PredictorSession:
         from ..serve.scheduler import ModelGuidedScheduler
         return ModelGuidedScheduler(self.step_cost_model(cfg, slots=slots),
                                     **kwargs)
+
+    # ------------------------------------------------------------ store --
+    def save_store(self, path=None, *, fingerprint=None):
+        """Capture this session's measurements (and every prepared
+        per-contraction :class:`~repro.core.model.ModelSet`) into a
+        :class:`repro.store.ModelStore`; write it to ``path`` if given.
+
+        A session on another process warm-starts from the file via
+        ``PredictorSession(store=path)`` and — measurements being the
+        only input to the per-signature models — produces bit-identical
+        rankings with zero new micro-benchmarks.
+        """
+        from ..store.modelstore import ModelStore
+        store = ModelStore.from_suite(self.suite, fingerprint=fingerprint)
+        for key, pred in self._contraction.items():
+            if pred._models is None:
+                continue             # never ranked: nothing fitted to keep
+            spec, sizes = key[0], key[1]
+            name = f"{spec.einsum_expr()}|" + ",".join(
+                f"{k}={v}" for k, v in sizes)
+            store.add_model_set(name, pred.model_set)
+        if path is not None:
+            store.save(path)
+        return store
+
+    def check_drift(self, *, max_keys: int = 8, threshold: float = 1.5,
+                    refresh: bool = False, measure_fn=None):
+        """Probe a deterministic subset of the suite's stored keys for
+        platform drift (see :class:`repro.store.DriftProbe`).
+
+        Warns (:class:`UserWarning`) when any probed key drifted beyond
+        ``threshold``; with ``refresh=True`` the stale keys are
+        re-measured in place (the suite's ``refreshed`` counter records
+        the repairs).  Returns the probe's readings.
+        """
+        from ..store.drift import DriftProbe
+        probe = DriftProbe(self.suite, max_keys=max_keys,
+                           threshold=threshold, measure_fn=measure_fn)
+        readings = probe.probe()
+        stale = probe.stale()
+        if stale:
+            worst = max(stale, key=lambda r: max(r.ratio, 1 / r.ratio))
+            warnings.warn(
+                f"model drift: {len(stale)}/{len(readings)} probed "
+                f"micro-benchmarks moved beyond {threshold}x (worst "
+                f"ratio {worst.ratio:.2f} on {worst.key.equation} "
+                f"{worst.key.a_shape}x{worst.key.b_shape}); "
+                + ("stale keys refreshed in place" if refresh else
+                   "re-measure with refresh=True or re-generate the "
+                   "store"),
+                UserWarning, stacklevel=2)
+            if refresh:
+                probe.refresh()
+        return readings
 
     # ------------------------------------------------------------- cost --
     def counters(self) -> Dict[str, float]:

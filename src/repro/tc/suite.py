@@ -168,6 +168,15 @@ class MicroBenchmarkSuite:
         self.requests = 0
         self.cost_seconds = 0.0
         self.oracle_cost_seconds = 0.0
+        # provenance breakdown of self.results: every key is exactly one
+        # of measured-here, loaded-from-a-store, or refreshed-in-place
+        self.measured = 0
+        self.loaded = 0
+        self.refreshed = 0
+        #: wall-clock the loaded measurements cost where they were
+        #: originally run — the amortized (not free!) part of a warm start
+        self.loaded_cost_seconds = 0.0
+        self._provenance: Dict[MicroBenchmarkKey, str] = {}
 
     # ------------------------------------------------------------- public --
     def key_for(self, alg: ContractionAlgorithm, sizes: Mapping[str, int],
@@ -192,6 +201,8 @@ class MicroBenchmarkSuite:
         if mb is None:
             mb = self._run(key)
             self.results[key] = mb
+            self.measured += 1
+            self._provenance[key] = "measured"
         return mb
 
     def benchmark_fresh(self, alg: ContractionAlgorithm,
@@ -207,24 +218,80 @@ class MicroBenchmarkSuite:
         return self._run(self.key_for(alg, sizes, arrival=arrival),
                          oracle=True)
 
+    def load_measurement(self, mb: MicroBenchmark) -> None:
+        """Insert a measurement taken elsewhere (a model-store warm start).
+
+        Counted under :attr:`loaded` (not :attr:`measured`) and its
+        original wall-clock under :attr:`loaded_cost_seconds` — so the
+        cost-fraction metrics can distinguish warm-start hits from fresh
+        measurements instead of silently treating loaded keys as free.
+        A key this suite already holds is not overwritten (the fresher
+        local measurement wins).
+        """
+        if mb.key in self.results:
+            return
+        self.results[mb.key] = mb
+        self.loaded += 1
+        self.loaded_cost_seconds += mb.seconds
+        self._provenance[mb.key] = "loaded"
+
+    def refresh(self, key: MicroBenchmarkKey) -> MicroBenchmark:
+        """Re-measure ``key`` in place (drift repair).
+
+        The new measurement replaces the stored one; the key moves from
+        its previous provenance bucket (loaded or measured) into
+        :attr:`refreshed`, and the re-measurement's wall-clock lands in
+        :attr:`cost_seconds` like any fresh benchmark.
+        """
+        mb = self._run(key)
+        self.results[key] = mb
+        previous = self._provenance.get(key)
+        if previous == "loaded":
+            self.loaded -= 1
+        elif previous == "measured":
+            self.measured -= 1
+        if previous != "refreshed":
+            self.refreshed += 1
+        self._provenance[key] = "refreshed"
+        return mb
+
     @property
     def n_benchmarks(self) -> int:
-        """Distinct micro-benchmarks run so far (< requests under dedup)."""
+        """Distinct micro-benchmarks held so far (< requests under dedup;
+        includes loaded warm-start keys)."""
         return len(self.results)
 
-    def cost_fraction(self, measured_seconds: float) -> float:
-        """Suite cost as a fraction of a measured contraction runtime."""
-        return self.cost_seconds / measured_seconds
+    def cost_fraction(self, measured_seconds: float, *,
+                      include_loaded: bool = False) -> float:
+        """Suite cost as a fraction of a measured contraction runtime.
+
+        By default only wall-clock *this* suite spent measuring counts —
+        the marginal cost of the predictions at hand.  With
+        ``include_loaded=True`` the original cost of warm-start loaded
+        measurements is added back: the amortized total, for honest
+        whole-lifecycle accounting.
+        """
+        cost = self.cost_seconds
+        if include_loaded:
+            cost += self.loaded_cost_seconds
+        return cost / measured_seconds
 
     def counters(self) -> Dict[str, float]:
         """Snapshot of the suite's running totals.
 
         Diff two snapshots to see what one phase genuinely added — e.g.
         how many *new* benchmarks (and how much wall-clock) the second
-        size point of a sweep cost on top of the first."""
+        size point of a sweep cost on top of the first.  The
+        ``loaded``/``measured``/``refreshed`` breakdown partitions
+        ``n_benchmarks`` by provenance: a warm-started session proves
+        zero fresh measurements by ``measured == 0``."""
         return {"requests": self.requests,
                 "n_benchmarks": self.n_benchmarks,
+                "measured": self.measured,
+                "loaded": self.loaded,
+                "refreshed": self.refreshed,
                 "cost_seconds": self.cost_seconds,
+                "loaded_cost_seconds": self.loaded_cost_seconds,
                 "oracle_cost_seconds": self.oracle_cost_seconds}
 
     # ----------------------------------------------------------- internal --

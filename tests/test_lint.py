@@ -364,6 +364,67 @@ def test_metric_tracking_flags_stale_table_row():
     assert out[0].path == "benchmarks/compare_smoke.py"
 
 
+# ------------------------------------------------------------ store-schema --
+
+def test_store_schema_clean_writer():
+    assert not findings_of("store-schema", """
+        import json
+        SCHEMA_VERSION = 1
+
+        def save(path, data):
+            payload = {"schema_version": SCHEMA_VERSION, "data": data}
+            with open(path, "w") as f:
+                json.dump(payload, f)
+    """, rel="src/repro/store/writer.py")
+
+
+def test_store_schema_imported_constant_is_clean():
+    assert not findings_of("store-schema", """
+        import json
+        from .modelstore import SCHEMA_VERSION
+
+        def save(path):
+            json.dump({"schema_version": SCHEMA_VERSION}, open(path, "w"))
+    """, rel="src/repro/store/other.py")
+
+
+def test_store_schema_flags_writer_without_constant():
+    out = findings_of("store-schema", """
+        import json
+
+        def save(path, data):
+            json.dump({"data": data}, open(path, "w"))
+    """, rel="src/repro/store/writer.py")
+    assert len(out) == 1 and "SCHEMA_VERSION" in out[0].message
+
+
+def test_store_schema_flags_unstamped_payload():
+    out = findings_of("store-schema", """
+        import json
+        SCHEMA_VERSION = 1
+
+        def save(path, data):
+            json.dump({"data": data}, open(path, "w"))
+    """, rel="src/repro/store/writer.py")
+    assert len(out) == 1 and "schema_version" in out[0].message
+
+
+def test_store_schema_flags_hardcoded_version_everywhere():
+    out = findings_of("store-schema", """
+        payload = {"schema_version": 1}
+    """, rel="benchmarks/bench_x.py")
+    assert len(out) == 1 and "hard-coded" in out[0].message
+
+
+def test_store_schema_ignores_json_outside_store_package():
+    assert not findings_of("store-schema", """
+        import json
+
+        def save(path, data):
+            json.dump({"data": data}, open(path, "w"))
+    """, rel="src/repro/core/model.py")
+
+
 # ------------------------------------------------- pragmas, baseline, runner --
 
 def test_pragma_suppresses_on_line_and_line_above():
@@ -461,9 +522,10 @@ def test_finding_render_formats():
         "::error file=src/a.py,line=3,title=reprolint host-sync::boom"
 
 
-def test_registry_has_the_five_checkers():
+def test_registry_has_the_six_checkers():
     assert set(REGISTRY) == {"host-sync", "retrace", "deprecated-kwarg",
-                             "oracle-coverage", "metric-tracking"}
+                             "oracle-coverage", "metric-tracking",
+                             "store-schema"}
 
 
 # -------------------------------------------------------------- repo gate --

@@ -11,11 +11,14 @@ One module per checker; each encodes one standing ROADMAP invariant:
 * :mod:`.oracle_coverage` — every prediction fast path is pinned to its
   equivalence oracle by a test (the docs/architecture.md convention);
 * :mod:`.metric_tracking` — every smoke metric is tracked or explicitly
-  allowlisted in ``benchmarks/compare_smoke.py``.
+  allowlisted in ``benchmarks/compare_smoke.py``;
+* :mod:`.store_schema` — model-store writers stamp the
+  ``SCHEMA_VERSION`` constant into every payload (PR 8 persistence
+  layer), and ``schema_version`` keys are never hard-coded numbers.
 """
 
 from . import (deprecated_kwargs, host_sync, metric_tracking,  # noqa: F401
-               oracle_coverage, retrace)
+               oracle_coverage, retrace, store_schema)
 
 __all__ = ["deprecated_kwargs", "host_sync", "metric_tracking",
-           "oracle_coverage", "retrace"]
+           "oracle_coverage", "retrace", "store_schema"]

@@ -1,0 +1,113 @@
+"""store-schema: store payloads always carry the SCHEMA_VERSION constant.
+
+The model store's load path refuses payloads whose ``schema_version``
+differs from the code's ``SCHEMA_VERSION`` — that refusal is the only
+thing standing between a payload-layout change and silently
+misinterpreted measurements.  The refusal only works if every writer
+stamps the constant, so this checker enforces two things statically:
+
+* any ``json.dump``/``json.dumps`` call in a module under
+  ``src/repro/store/`` requires the module to know ``SCHEMA_VERSION``
+  (defined or imported) AND to build at least one dict literal whose
+  ``"schema_version"`` key is valued by the ``SCHEMA_VERSION`` *name* —
+  a store writer that never references the constant writes files the
+  loader cannot version-check;
+* anywhere in the linted tree, a dict literal with a ``"schema_version"``
+  key valued by a plain constant (``"schema_version": 1``) is flagged:
+  a hard-coded version silently diverges from the module constant on the
+  next bump, which is exactly the failure the constant exists to
+  prevent.
+
+Like every reprolint rule, a deliberate exception carries a
+``# reprolint: allow[store-schema]`` pragma with a justification.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Tuple
+
+from ..core import Checker, FileContext, Finding, register
+
+STORE_PREFIX = "src/repro/store/"
+CONSTANT = "SCHEMA_VERSION"
+
+
+def _is_json_dump(node: ast.Call) -> bool:
+    f = node.func
+    return (isinstance(f, ast.Attribute) and
+            f.attr in ("dump", "dumps") and
+            isinstance(f.value, ast.Name) and f.value.id == "json")
+
+
+def _knows_constant(tree: ast.AST) -> bool:
+    """Does the module define or import ``SCHEMA_VERSION``?"""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            if any(isinstance(t, ast.Name) and t.id == CONSTANT
+                   for t in node.targets):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if any(a.name == CONSTANT or a.asname == CONSTANT
+                   for a in node.names):
+                return True
+    return False
+
+
+def _schema_key_values(tree: ast.AST) -> List[Tuple[ast.expr,
+                                                    Optional[ast.expr]]]:
+    """(key node, value node) for every dict-literal "schema_version"."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Dict):
+            continue
+        for k, v in zip(node.keys, node.values):
+            if isinstance(k, ast.Constant) and k.value == "schema_version":
+                out.append((k, v))
+    return out
+
+
+def _stamps_constant(tree: ast.AST) -> bool:
+    """Is there a dict literal stamping the SCHEMA_VERSION *name*?"""
+    return any(isinstance(v, ast.Name) and v.id == CONSTANT
+               for _, v in _schema_key_values(tree))
+
+
+@register
+class StoreSchemaChecker(Checker):
+    id = "store-schema"
+    description = ("store-file writers stamp the SCHEMA_VERSION constant "
+                   "into their payload; 'schema_version' keys are never "
+                   "hard-coded numbers")
+
+    def check_file(self, ctx: FileContext) -> Iterable[Finding]:
+        in_store = ctx.rel.startswith(STORE_PREFIX)
+        if in_store:
+            knows = _knows_constant(ctx.tree)
+            stamps = _stamps_constant(ctx.tree)
+            for node in ast.walk(ctx.tree):
+                if not (isinstance(node, ast.Call) and _is_json_dump(node)):
+                    continue
+                if not knows:
+                    yield Finding(
+                        self.id, ctx.rel, node.lineno,
+                        "store module writes JSON without defining or "
+                        "importing SCHEMA_VERSION — the loader cannot "
+                        "version-check files this writer produces")
+                elif not stamps:
+                    yield Finding(
+                        self.id, ctx.rel, node.lineno,
+                        "store module writes JSON but no payload dict "
+                        "carries '\"schema_version\": SCHEMA_VERSION' — "
+                        "stamp the constant so the loader can refuse "
+                        "future-schema files")
+        # everywhere (store, benches, examples, docs snippets): a
+        # hard-coded schema_version bypasses the constant it mirrors
+        for k, v in _schema_key_values(ctx.tree):
+            if isinstance(v, ast.Constant):
+                yield Finding(
+                    self.id, ctx.rel, k.lineno,
+                    f"hard-coded schema version "
+                    f"('schema_version': {v.value!r}) — use the "
+                    f"SCHEMA_VERSION constant from repro.store so the "
+                    f"payload tracks schema bumps")
