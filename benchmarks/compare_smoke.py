@@ -47,6 +47,7 @@ METRICS = (
     ("contractions", "tc_rank64_rank_jax_s", False),
     ("contractions", "tc_sweep_suite_s", False),
     ("contractions", "tc_sweep_rank_jax_s", False),
+    ("contractions", "tc_param_refine_suite_s", False),
     ("einsum_paths", "tc_chain_suite_s", False),
     ("einsum_paths", "tc_chain_rank_numpy_s", False),
     ("einsum_paths", "tc_chain_rank_jax_s", False),
@@ -71,6 +72,9 @@ UNTRACKED = (
     ("contractions", "tc_sweep_points"),
     ("contractions", "tc_sweep_benchmarks"),
     ("contractions", "tc_sweep_new_benchmarks"),
+    ("contractions", "tc_param_signatures"),
+    ("contractions", "tc_param_refine_measured"),
+    ("contractions", "tc_param_predicted"),
     ("einsum_paths", "tc_chain_paths"),
     ("einsum_paths", "tc_chain_steps"),
     ("einsum_paths", "tc_chain_benchmarks"),
@@ -83,6 +87,7 @@ UNTRACKED = (
     ("batched_sweep", "sweep64_jax_beats_numpy"),
     ("contractions", "tc_rank64_backend_agree"),
     ("contractions", "tc_rank64_oracle_agree"),
+    ("contractions", "tc_param_top1_agree"),
     ("einsum_paths", "tc_chain_backend_agree"),
     ("einsum_paths", "tc_chain_oracle_agree"),
     # numerical-agreement magnitudes: bounded by in-bench assertions
@@ -103,6 +108,11 @@ UNTRACKED = (
     ("contractions", "tc_rank64_exec_s"),
     ("contractions", "tc_rank64_cost_frac"),
     ("contractions", "tc_sweep_cost_frac"),
+    ("contractions", "tc_param_cost_frac"),
+    # holdout prediction error vs ONE fresh oracle measurement per
+    # candidate — real-timing noise dominates; the deterministic band
+    # is pinned in tests/test_parametric.py instead
+    ("contractions", "tc_param_holdout_relerr"),
     ("einsum_paths", "tc_chain_exec_s"),
     ("einsum_paths", "tc_chain_cost_frac"),
     ("einsum_paths", "tc_sweep_chain_suite_s"),

@@ -12,7 +12,7 @@ paper's selected default configuration (Table 3.3, row 10).
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Mapping, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,6 +37,11 @@ class GeneratorConfig:
     min_width: int = 32
     round_to: int = 8
     max_pieces: int = 128            # safety cap (not in the paper)
+    #: measurement budget (not in the paper): once this many points have
+    #: been *freshly* sampled, the current pieces become terminal — no
+    #: further bisection.  The root grid is always sampled in full, so
+    #: the total may overshoot by at most one grid.  ``None`` = unbounded.
+    max_points: Optional[int] = None
 
 
 SampleFn = Callable[[Sequence[Point]], Mapping[Point, Stats]]
@@ -53,11 +58,19 @@ def _points_per_dim(basis: Sequence[Exponents], ndim: int,
 
 
 class _Cache:
-    """Measurement cache enabling point reuse across refinement levels."""
+    """Measurement cache enabling point reuse across refinement levels.
 
-    def __init__(self, sample_fn: SampleFn):
+    ``known`` pre-seeds the cache with measurements taken elsewhere (e.g.
+    a suite's exact-shape results): those points are served without
+    sampling and do NOT count toward :attr:`measured_points`, so a
+    measurement budget (:attr:`GeneratorConfig.max_points`) bounds only
+    the *fresh* work refinement causes.
+    """
+
+    def __init__(self, sample_fn: SampleFn,
+                 known: Optional[Mapping[Point, Stats]] = None):
         self.sample_fn = sample_fn
-        self.data: Dict[Point, Stats] = {}
+        self.data: Dict[Point, Stats] = dict(known) if known else {}
         self.measured_points = 0
 
     def get(self, points: Sequence[Point]) -> Dict[Point, Stats]:
@@ -90,10 +103,16 @@ def _fit_piece(domain: Domain, stats: Mapping[Point, Stats],
 
 def refine(domain: Domain, sample_fn: SampleFn,
            cost_exponents: Sequence[Exponents],
-           config: GeneratorConfig = GeneratorConfig()) -> List[Piece]:
-    """Generate the piecewise-polynomial sub-model for one case (§3.2.5)."""
+           config: GeneratorConfig = GeneratorConfig(), *,
+           known: Optional[Mapping[Point, Stats]] = None) -> List[Piece]:
+    """Generate the piecewise-polynomial sub-model for one case (§3.2.5).
+
+    ``known`` pre-seeds the measurement cache (see :class:`_Cache`):
+    points already measured elsewhere are reused without sampling and
+    without counting toward ``config.max_points``.
+    """
     basis = monomial_basis(cost_exponents, overfit=config.overfit)
-    cache = _Cache(sample_fn)
+    cache = _Cache(sample_fn, known=known)
     pieces: List[Piece] = []
     stack = [domain]
     while stack:
@@ -112,6 +131,8 @@ def refine(domain: Domain, sample_fn: SampleFn,
             err <= config.error_bound
             or dom.min_width() < config.min_width
             or len(pieces) + len(stack) + 2 > config.max_pieces
+            or (config.max_points is not None
+                and cache.measured_points >= config.max_points)
         )
         if terminal:
             pieces.append(piece)

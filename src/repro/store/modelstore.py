@@ -47,6 +47,14 @@ from .fingerprint import PlatformFingerprint, current_fingerprint
 #: loader refuses mismatched schemas even under ``allow_mismatch=True``.
 SCHEMA_VERSION = 1
 
+#: reserved ``model_sets`` name holding fitted size-parametric models
+#: (:meth:`repro.tc.parametric.ParametricModels.to_model_set`).  Riding
+#: inside the existing schema-versioned ``model_sets`` mapping keeps the
+#: payload layout — and therefore :data:`SCHEMA_VERSION` — unchanged:
+#: stores written before parametric models existed load exactly as
+#: before, and old readers see just another named model set.
+PARAMETRIC_MODEL_SET = "__parametric__"
+
 
 class StoreMismatchError(ValueError):
     """A store file refusing to load: wrong schema or wrong platform."""
@@ -144,6 +152,25 @@ class ModelStore:
 
     def model_set(self, name: str) -> ModelSet:
         return self.model_sets[name]
+
+    def add_parametric_models(self, models) -> None:
+        """Attach fitted size-parametric models under the reserved name
+        (:data:`PARAMETRIC_MODEL_SET`).
+
+        Accepts a :class:`repro.tc.parametric.ParametricModels` registry
+        (exported via its ``to_model_set``) or an already-exported
+        :class:`ModelSet`.  The models round-trip bit-exactly: a session
+        warm-started from this store predicts unmeasured shapes
+        bit-identically to the session that fitted them.
+        """
+        ms = models.to_model_set() if hasattr(models, "to_model_set") \
+            else models
+        self.model_sets[PARAMETRIC_MODEL_SET] = ms
+
+    def parametric_model_set(self) -> Optional[ModelSet]:
+        """The stored size-parametric models, or ``None`` if this store
+        holds none (e.g. written before they existed)."""
+        return self.model_sets.get(PARAMETRIC_MODEL_SET)
 
     # ---------------------------------------------------------- warm start --
     def load_into(self, suite: MicroBenchmarkSuite) -> int:

@@ -28,6 +28,9 @@ from .kernels import (BATCH_SUFFIX, BATCHABLE_KERNELS, base_kernel,
                       generate_algorithms, generate_batched_algorithms,
                       is_batched_kernel, kernel_batch_dims, slice_call_bytes,
                       validate_algorithms)
+from .parametric import (ParametricModel, ParametricModels, SignatureKey,
+                         cost_exponents, key_at, signature_dims,
+                         signature_of, size_point)
 from .predictor import (ContractionPredictor, ContractionSizeSweep,
                         RankedContraction, rank_contraction_sweep)
 from .session import PredictorSession, warn_deprecated_kwargs
@@ -48,4 +51,7 @@ __all__ = [
     "execute_chain", "execute_chain_reference", "execute_path_reference",
     "rank_einsum_sweep", "validate_paths",
     "PredictorSession", "warn_deprecated_kwargs",
+    "ParametricModel", "ParametricModels", "SignatureKey",
+    "cost_exponents", "key_at", "signature_dims", "signature_of",
+    "size_point",
 ]

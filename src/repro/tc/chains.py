@@ -47,7 +47,8 @@ from ..core.predict import TraceCache
 from ..core.sampler import Stats
 from .kernels import base_kernel, generate_algorithms
 from .predictor import ContractionPredictor, RankedContraction, SizeSweep
-from .suite import COLD, WARM, MicroBenchmarkSuite, resolve_suite
+from .suite import (COLD, WARM, MicroBenchmarkKey, MicroBenchmarkSuite,
+                    resolve_suite)
 
 #: largest supported einsum-chain operand count (path count grows as the
 #: double factorial (2N-3)!!: 3, 15, 105 for N = 3, 4, 5)
@@ -449,6 +450,18 @@ class ChainPredictor:
         for path in self.paths:
             for step in path.steps:
                 self.step_predictor(step).prepare()
+
+    def benchmark_keys(self) -> List[MicroBenchmarkKey]:
+        """Every step candidate's suite key across ALL paths — computed
+        without measuring anything (step predictors are constructed but
+        never prepared).  The chain-level analogue of
+        :meth:`~repro.tc.predictor.ContractionPredictor.benchmark_keys`,
+        feeding the session's parametric pre-pass."""
+        keys = []
+        for path in self.paths:
+            for step in path.steps:
+                keys.extend(self.step_predictor(step).benchmark_keys())
+        return keys
 
     # ------------------------------------------------------------ rank --
     def rank_paths(self, *, stat: str = "med",

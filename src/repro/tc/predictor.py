@@ -144,6 +144,16 @@ class ContractionPredictor:
         self._tracer = self._trace   # stable identity for the TraceCache
 
     # ------------------------------------------------------------- suite --
+    def benchmark_keys(self) -> List[MicroBenchmarkKey]:
+        """Every candidate's suite key at this predictor's sizes —
+        computed WITHOUT measuring anything (key derivation is pure
+        arithmetic).  The parametric pre-pass enumerates these across a
+        sweep grid to decide which signatures need fitting before any
+        ranking runs (:meth:`repro.tc.session.PredictorSession.
+        refine_parametric`)."""
+        return [self.suite.key_for(alg, self.sizes, arrival=self.arrival)
+                for alg in self.algorithms]
+
     def prepare(self) -> None:
         """Run the (deduplicated) suite and compile the candidate models."""
         if self._models is not None:
@@ -262,7 +272,9 @@ class SizeSweep:
     ``sizes_grid[i]``; every point was predicted from the ONE shared
     :attr:`suite` / :attr:`cache`, so a new size point re-predicts from
     existing measurements wherever its (equation, shapes, cache-class)
-    keys are unchanged and only the genuinely new keys are measured.
+    keys are unchanged and only the genuinely new keys are measured —
+    or, when the suite carries fitted size-parametric models
+    (:mod:`repro.tc.parametric`), predicted without measuring at all.
     """
 
     sizes_grid: Tuple[Dict[str, int], ...]
@@ -279,6 +291,13 @@ class SizeSweep:
     def n_benchmarks(self) -> int:
         """Distinct micro-benchmarks measured across ALL size points."""
         return self.suite.n_benchmarks
+
+    @property
+    def predicted_parametric(self) -> int:
+        """Distinct grid keys served from size-parametric models instead
+        of measurements (0 on a non-parametric suite) — how much of the
+        sweep was covered without a single fresh micro-benchmark."""
+        return self.suite.predicted_parametric
 
     def cost_fraction(self, measured_seconds: float) -> float:
         """Total suite cost over one measured execution — the whole

@@ -38,8 +38,9 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from ..core.contractions import ContractionAlgorithm, ContractionSpec
 from ..core.predict import TraceCache
-from .chains import (ChainPredictor, ChainSizeSweep, RankedChain,
+from .chains import (ChainPredictor, ChainSizeSweep, ChainSpec, RankedChain,
                      rank_einsum_sweep)
+from .parametric import ParametricModels
 from .predictor import (ContractionPredictor, ContractionSizeSweep,
                         RankedContraction, rank_contraction_sweep)
 from .suite import MicroBenchmarkSuite, resolve_suite
@@ -81,14 +82,29 @@ class PredictorSession:
     Predictors are memoized per (spec, sizes, candidate-set) signature:
     calling :meth:`rank_contraction_algorithms` twice with equal
     arguments reuses the first call's compiled batch outright.
+
+    With ``parametric=True`` the session carries a
+    :class:`~repro.tc.parametric.ParametricModels` registry hooked onto
+    its suite: sweeps pre-fit size-parametric per-signature models with
+    budgeted adaptive refinement (:meth:`refine_parametric`) and grid
+    points inside a fitted domain are *predicted*, not measured.
+    ``parametric_error_bound`` is the target relative confidence of a
+    fit and ``parametric_budget`` the per-signature fresh-measurement
+    cap.  A store warm start that holds fitted parametric models
+    enables the registry automatically; a suite shared from another
+    session brings its registry along.
     """
 
     def __init__(self, *, backend: str = "numpy",
                  suite: Optional[MicroBenchmarkSuite] = None,
                  cache: Optional[TraceCache] = None,
                  repetitions: Optional[int] = None,
-                 store=None, allow_mismatch: bool = False):
+                 store=None, allow_mismatch: bool = False,
+                 parametric: bool = False,
+                 parametric_error_bound: float = 0.05,
+                 parametric_budget: Optional[int] = 32):
         self.backend = backend
+        param_sets = None
         if store is not None:
             # warm start from a repro.store.ModelStore (object or path):
             # the store's measurement protocol builds the suite and every
@@ -105,9 +121,26 @@ class PredictorSession:
                 store = ModelStore.load(store,
                                         allow_mismatch=allow_mismatch)
             self.suite = store.build_suite(repetitions=repetitions)
+            param_sets = store.parametric_model_set()
+            if param_sets is not None:
+                parametric = True
         else:
             self.suite = resolve_suite(suite, repetitions)
         self.cache = cache if cache is not None else TraceCache()
+        if parametric:
+            if self.suite.parametric is not None:
+                # a shared suite brings its registry along; the knobs
+                # were fixed by whoever built it
+                self.parametric = self.suite.parametric
+            else:
+                self.parametric = ParametricModels(
+                    self.suite, error_bound=parametric_error_bound,
+                    budget=parametric_budget)
+                self.suite.parametric = self.parametric
+            if param_sets is not None:
+                self.parametric.load_model_set(param_sets)
+        else:
+            self.parametric = self.suite.parametric
         self._contraction: Dict[Tuple, ContractionPredictor] = {}
         self._chain: Dict[Tuple, ChainPredictor] = {}
 
@@ -148,7 +181,6 @@ class PredictorSession:
                         ) -> ChainPredictor:
         """The (memoized) per-einsum chain predictor on this session's
         suite/cache."""
-        from .chains import ChainSpec
         chain = ChainSpec.parse(chain)
         key = (chain, tuple(sorted(sizes.items())), include_batched,
                tuple(kernels) if kernels is not None else None,
@@ -199,7 +231,14 @@ class PredictorSession:
             ) -> ContractionSizeSweep:
         """Size-sweep autotuning on this session's shared suite: only
         genuinely new (equation, shapes, cache-class) keys are measured
-        across the grid."""
+        across the grid.  On a parametric session the grid's signatures
+        are pre-fitted first (:meth:`refine_parametric`), so grid points
+        inside a fitted domain are predicted without any measurement."""
+        if self.parametric is not None:
+            self.refine_parametric(spec, sizes_grid,
+                                   algorithms=algorithms,
+                                   include_batched=include_batched,
+                                   arrival=arrival)
         # the sanctioned delegation site: the session IS the owner these
         # kwargs were deprecated in favor of
         # reprolint: allow[deprecated-kwarg]
@@ -240,7 +279,15 @@ class PredictorSession:
                           max_loop_perms: int = 24,
                           memory_limit_bytes: Optional[int] = None,
                           ) -> ChainSizeSweep:
-        """Chain-level size sweep from this session's shared suite."""
+        """Chain-level size sweep from this session's shared suite.  On
+        a parametric session the grid's step signatures are pre-fitted
+        first (:meth:`refine_parametric`)."""
+        if self.parametric is not None:
+            self.refine_parametric(chain, sizes_grid,
+                                   include_batched=include_batched,
+                                   kernels=kernels,
+                                   max_loop_perms=max_loop_perms,
+                                   memory_limit_bytes=memory_limit_bytes)
         # the sanctioned delegation site: the session IS the owner these
         # kwargs were deprecated in favor of
         # reprolint: allow[deprecated-kwarg]
@@ -250,6 +297,57 @@ class PredictorSession:
             include_batched=include_batched, kernels=kernels,
             max_loop_perms=max_loop_perms,
             memory_limit_bytes=memory_limit_bytes)
+
+    # ------------------------------------------------------- parametric --
+    def refine_parametric(self, spec,
+                          sizes_grid: Sequence[Mapping[str, int]], *,
+                          algorithms: Optional[
+                              Sequence[ContractionAlgorithm]] = None,
+                          include_batched: bool = True,
+                          arrival: Optional[Mapping[str, str]] = None,
+                          kernels: Optional[Sequence[str]] = None,
+                          max_loop_perms: int = 24,
+                          memory_limit_bytes: Optional[int] = None,
+                          ) -> Dict[str, int]:
+        """Fit size-parametric models for everything a sweep will need.
+
+        The pre-pass enumerates every micro-benchmark key the grid's
+        candidates map to (pure key arithmetic — nothing is measured),
+        groups them by (canonical kernel equation, cache classes)
+        signature, and fits a budgeted adaptive-refinement model per
+        signature with unmeasured keys
+        (:meth:`repro.tc.parametric.ParametricModels.ensure`): sampling
+        happens where the fit's relative error is highest and stops at
+        the session's ``parametric_error_bound`` or
+        ``parametric_budget``.  ``spec`` may be a pairwise contraction
+        or an N-operand einsum chain (the chain keywords apply only
+        then).  Returns the ensure summary — ``signatures_fitted`` /
+        ``signatures_covered`` / ``measured`` (fresh refinement
+        measurements).  The exact-shape measurement path
+        (``benchmark_fresh`` / ``rank_oracle``) stays intact as the
+        per-shape oracle for these fits.
+        """
+        if self.parametric is None:
+            raise ValueError(
+                "parametric models are disabled: construct the session "
+                "with parametric=True (or warm-start from a store "
+                "holding fitted parametric models)")
+        chain = isinstance(spec, ChainSpec) or (
+            not isinstance(spec, ContractionSpec)
+            and str(spec).split("->")[0].count(",") >= 2)
+        keys = []
+        for sizes in sizes_grid:
+            if chain:
+                pred = self.chain_predictor(
+                    spec, sizes, include_batched=include_batched,
+                    kernels=kernels, max_loop_perms=max_loop_perms,
+                    memory_limit_bytes=memory_limit_bytes)
+            else:
+                pred = self.contraction_predictor(
+                    spec, sizes, algorithms=algorithms,
+                    include_batched=include_batched, arrival=arrival)
+            keys.extend(pred.benchmark_keys())
+        return self.parametric.ensure(keys)
 
     # ---------------------------------------------------------- serving --
     def step_cost_model(self, cfg, *, slots: int):
@@ -279,7 +377,11 @@ class PredictorSession:
         A session on another process warm-starts from the file via
         ``PredictorSession(store=path)`` and — measurements being the
         only input to the per-signature models — produces bit-identical
-        rankings with zero new micro-benchmarks.
+        rankings with zero new micro-benchmarks.  Fitted size-parametric
+        models ride along under the store's reserved name, so the
+        warm-started session also covers every *unmeasured* shape the
+        fitted domains span (and re-enables ``parametric`` mode
+        automatically).
         """
         from ..store.modelstore import ModelStore
         store = ModelStore.from_suite(self.suite, fingerprint=fingerprint)
@@ -290,6 +392,8 @@ class PredictorSession:
             name = f"{spec.einsum_expr()}|" + ",".join(
                 f"{k}={v}" for k, v in sizes)
             store.add_model_set(name, pred.model_set)
+        if self.parametric is not None and self.parametric.models:
+            store.add_parametric_models(self.parametric)
         if path is not None:
             store.save(path)
         return store

@@ -177,6 +177,15 @@ class MicroBenchmarkSuite:
         #: originally run — the amortized (not free!) part of a warm start
         self.loaded_cost_seconds = 0.0
         self._provenance: Dict[MicroBenchmarkKey, str] = {}
+        #: optional size-parametric model registry
+        #: (:class:`repro.tc.parametric.ParametricModels`): consulted by
+        #: :meth:`benchmark` for keys with no stored measurement before
+        #: falling back to a fresh one.  Predictions are held apart from
+        #: :attr:`results` (they are NOT measurements: a
+        #: :class:`repro.store.ModelStore` must never persist them as
+        #: such) and counted under :attr:`predicted_parametric`.
+        self.parametric = None
+        self._predicted: Dict[MicroBenchmarkKey, MicroBenchmark] = {}
 
     # ------------------------------------------------------------- public --
     def key_for(self, alg: ContractionAlgorithm, sizes: Mapping[str, int],
@@ -194,13 +203,46 @@ class MicroBenchmarkSuite:
 
         ``arrival`` forwards known operand arrival classes into the key
         (chain intermediates); identical keys share one measurement.
+        An unmeasured key whose size point a fitted size-parametric
+        model covers (:attr:`parametric`) is served as a synthetic
+        prediction instead of being measured — stored measurements
+        always win over predictions.
         """
         self.requests += 1
         key = self.key_for(alg, sizes, arrival=arrival)
         mb = self.results.get(key)
+        if mb is not None:
+            return mb
+        mb = self._predicted.get(key)
+        if mb is not None:
+            return mb
+        if self.parametric is not None:
+            mb = self.parametric.predict(key)
+            if mb is not None:
+                self._predicted[key] = mb
+                return mb
+        mb = self._run(key)
+        self.results[key] = mb
+        self.measured += 1
+        self._provenance[key] = "measured"
+        return mb
+
+    def measure_key(self, key: MicroBenchmarkKey) -> MicroBenchmark:
+        """Measure a concrete key directly, with deduplication.
+
+        The refinement sampling path: parametric fitting lowers its
+        grid points to keys (:func:`repro.tc.parametric.key_at`) and
+        measures them here — bypassing :attr:`parametric` on purpose (a
+        model must never train on its own predictions), but sharing
+        :attr:`results` so refinement samples are ordinary
+        provenance-tracked measurements any later request reuses.
+        """
+        self.requests += 1
+        mb = self.results.get(key)
         if mb is None:
             mb = self._run(key)
             self.results[key] = mb
+            self._predicted.pop(key, None)   # a measurement supersedes it
             self.measured += 1
             self._provenance[key] = "measured"
         return mb
@@ -245,6 +287,7 @@ class MicroBenchmarkSuite:
         """
         mb = self._run(key)
         self.results[key] = mb
+        self._predicted.pop(key, None)   # a measurement supersedes it
         previous = self._provenance.get(key)
         if previous == "loaded":
             self.loaded -= 1
@@ -254,6 +297,30 @@ class MicroBenchmarkSuite:
             self.refreshed += 1
         self._provenance[key] = "refreshed"
         return mb
+
+    def drop_predictions(self, sig) -> int:
+        """Invalidate held predictions whose signature matches ``sig``
+        (an object with ``equation``/``classes``) — called when a
+        signature's parametric model is refitted, so stale predictions
+        from the old fit cannot be served again."""
+        stale = [k for k in self._predicted
+                 if k.equation == sig.equation and k.classes == sig.classes]
+        for k in stale:
+            del self._predicted[k]
+        return len(stale)
+
+    @property
+    def predicted_parametric(self) -> int:
+        """Distinct keys currently served from parametric predictions —
+        the provenance bucket next to measured/loaded/refreshed, held
+        OUTSIDE :attr:`results` (predictions are not measurements)."""
+        return len(self._predicted)
+
+    @property
+    def predictions(self) -> Dict[MicroBenchmarkKey, MicroBenchmark]:
+        """The currently-held parametric predictions (a copy — the
+        provenance bookkeeping is not for callers to mutate)."""
+        return dict(self._predicted)
 
     @property
     def n_benchmarks(self) -> int:
@@ -284,12 +351,18 @@ class MicroBenchmarkSuite:
         size point of a sweep cost on top of the first.  The
         ``loaded``/``measured``/``refreshed`` breakdown partitions
         ``n_benchmarks`` by provenance: a warm-started session proves
-        zero fresh measurements by ``measured == 0``."""
+        zero fresh measurements by ``measured == 0``.
+        ``predicted_parametric`` counts keys served from size-parametric
+        models instead — held apart from ``n_benchmarks``, since a
+        prediction is not a measurement: a sweep over never-measured
+        shapes proves it issued zero fresh micro-benchmarks by
+        ``measured`` unchanged AND ``predicted_parametric`` grown."""
         return {"requests": self.requests,
                 "n_benchmarks": self.n_benchmarks,
                 "measured": self.measured,
                 "loaded": self.loaded,
                 "refreshed": self.refreshed,
+                "predicted_parametric": self.predicted_parametric,
                 "cost_seconds": self.cost_seconds,
                 "loaded_cost_seconds": self.loaded_cost_seconds,
                 "oracle_cost_seconds": self.oracle_cost_seconds}

@@ -286,6 +286,56 @@ def test_oracle_coverage_oracle_call_satisfies(tmp_path):
     assert not out
 
 
+def _refine_repo(tmp_path: Path, test_body: str) -> Path:
+    (tmp_path / "src").mkdir()
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "src" / "param.py").write_text(textwrap.dedent("""
+        def refine_parametric(spec, grid):
+            return {}
+    """))
+    (tmp_path / "tests" / "test_param.py").write_text(
+        textwrap.dedent(test_body))
+    return tmp_path
+
+
+def _refine_findings(root: Path):
+    ctxs = [FileContext("src/param.py",
+                        (root / "src" / "param.py").read_text())]
+    return [f for f in REGISTRY["oracle-coverage"].check_repo(ctxs, root)
+            if "refine_parametric" in f.message]
+
+
+def test_oracle_coverage_flags_unpinned_refine_parametric(tmp_path):
+    # parametric predictions without a measured-oracle comparison are
+    # exactly the "plausible but unpinned fast path" the checker exists for
+    out = _refine_findings(_refine_repo(tmp_path, """
+        def test_refine():
+            assert sess.refine_parametric(spec, grid)["measured"] > 0
+    """))
+    assert len(out) == 1 and "unpinned" in out[0].message
+    assert "benchmark_fresh" in out[0].message
+    assert (out[0].path, out[0].line) == ("src/param.py", 2)
+
+
+def test_oracle_coverage_measured_oracle_pins_refine_parametric(tmp_path):
+    out = _refine_findings(_refine_repo(tmp_path, """
+        def test_refine():
+            sess.refine_parametric(spec, grid)
+            fresh = suite.benchmark_fresh(alg, sizes)
+            assert predicted.med == pytest.approx(fresh.stats.med)
+    """))
+    assert not out
+
+
+def test_oracle_coverage_rank_oracle_pins_refine_parametric(tmp_path):
+    out = _refine_findings(_refine_repo(tmp_path, """
+        def test_refine():
+            sess.refine_parametric(spec, grid)
+            assert ranking[0].name == pred.rank_oracle()[0].name
+    """))
+    assert not out
+
+
 # ----------------------------------------------------------- metric-tracking --
 
 _RUN_PY = """

@@ -1,0 +1,245 @@
+"""Tests for the size-parametric suite models (repro.tc.parametric).
+
+The tentpole contract, pinned against the measured oracle: after a
+budgeted refinement pass over a size grid, a sweep over grid points
+whose shapes were NEVER measured issues **zero** fresh micro-benchmarks
+(the suite's ``measured`` counter proves it, ``predicted_parametric``
+counts the keys served from models instead) and its rankings agree with
+the exact-shape measurement path (``benchmark_fresh`` / ``rank_oracle``)
+— which stays intact as the per-shape equivalence oracle.
+
+All measurement goes through an injected deterministic ``measure_fn``
+whose runtime is linear in ``key.call_bytes`` — inside the fitted
+basis's span, so held-out predictions are exact up to float noise and
+the oracle comparisons are equivalence checks, not statistical ones.
+"""
+
+import pytest
+
+from repro.store import PARAMETRIC_MODEL_SET, ModelStore, kendall_tau
+from repro.tc import PredictorSession
+from repro.tc.parametric import (ParametricModels, cost_exponents, key_at,
+                                 signature_dims, signature_of, size_point)
+from repro.tc.suite import MicroBenchmarkSuite
+from repro.core.sampler import Stats
+
+SPEC = "bij,bjk->bik"
+#: the refinement pass sees only the grid ENDPOINTS; the cheap cartesian
+#: root grid over [lo, hi] samples {lo, mid, hi} per varying dim
+REFINE_GRID = [dict(b=8, i=i, j=64, k=64) for i in (32, 96)]
+#: held-out sizes strictly inside the fitted domains but never on any
+#: refinement grid (the root samples i-derived extents at 32/64/96)
+HOLDOUTS = [dict(b=8, i=i, j=64, k=64) for i in (40, 56)]
+
+
+def fake_measure(key, repetitions):
+    """Deterministic pure function of the key: exact reproducibility."""
+    t = 1e-9 * key.call_bytes + 2e-6 + 5e-7 * key.classes.count("cold")
+    return Stats(0.95 * t, t, 1.1 * t, 1.01 * t, 0.02 * t), 1e-3
+
+
+def fake_suite(**kw):
+    return MicroBenchmarkSuite(measure_fn=fake_measure, **kw)
+
+
+def parametric_session(**kw):
+    return PredictorSession(suite=fake_suite(), parametric=True, **kw)
+
+
+def refined_session(**kw):
+    sess = parametric_session(**kw)
+    sess.refine_parametric(SPEC, REFINE_GRID)
+    return sess
+
+
+# ----------------------------------------------------------- signatures ----
+
+def test_signature_point_roundtrip():
+    sess = parametric_session()
+    pred = sess.contraction_predictor(SPEC, HOLDOUTS[0])
+    keys = pred.benchmark_keys()          # pure key arithmetic
+    assert sess.suite.n_benchmarks == 0   # ...nothing was measured
+    for key in keys:
+        sig = signature_of(key)
+        point = size_point(key)
+        assert key_at(sig, point) == key
+        dims = signature_dims(key.equation)
+        assert len(point) == len(dims)
+        assert cost_exponents(key.equation) == ((1,) * len(dims),)
+
+
+def test_size_point_rejects_inconsistent_key():
+    sess = parametric_session()
+    key = sess.contraction_predictor(SPEC, HOLDOUTS[0]).benchmark_keys()[0]
+    bad = key.__class__(equation=key.equation, a_shape=key.a_shape,
+                        b_shape=key.b_shape,
+                        out_shape=tuple(n + 1 for n in key.out_shape),
+                        classes=key.classes)
+    with pytest.raises(ValueError):
+        size_point(bad)
+
+
+# ------------------------------------------- the zero-measurement sweep ----
+
+def test_sweep_over_unmeasured_shapes_measures_nothing():
+    sess = refined_session()
+    budget = sess.parametric.config.max_points
+    for model in sess.parametric.models.values():
+        # per-signature fresh sampling respects the budget (the root
+        # grid, at most 3 points per varying dim here, never exceeds it)
+        assert model.n_refine_measured <= budget
+    before = sess.suite.counters()
+    sweep = sess.rank_contraction_sweep(SPEC, HOLDOUTS)
+    after = sess.suite.counters()
+    # the acceptance pin: the sweep itself issued ZERO micro-benchmarks
+    assert after["measured"] == before["measured"]
+    assert after["n_benchmarks"] == before["n_benchmarks"]
+    assert sweep.predicted_parametric > 0
+    assert after["predicted_parametric"] == sweep.predicted_parametric
+    assert len(sweep.rankings) == len(HOLDOUTS)
+
+
+def test_sweep_agrees_with_measured_oracle_at_holdouts():
+    sess = refined_session()
+    sweep = sess.rank_contraction_sweep(SPEC, HOLDOUTS)
+    for sizes, ranking in zip(HOLDOUTS, sweep.rankings):
+        pred = sess.contraction_predictor(SPEC, sizes)
+        oracle = pred.rank_oracle(stat="med", fresh=True)
+        oracle_med = {r.name: r.runtime.med for r in oracle}
+        # top-1 agreement (modulo exact ties: the predicted winner's
+        # measured runtime equals the measured optimum)
+        assert oracle_med[ranking[0].name] == \
+            pytest.approx(oracle[0].runtime.med, rel=1e-9)
+        # per-candidate totals from the parametric predictions match the
+        # fresh exact measurements
+        for r in ranking:
+            assert r.runtime.med == pytest.approx(oracle_med[r.name],
+                                                  rel=1e-6)
+        assert kendall_tau([r.name for r in ranking],
+                           [r.name for r in oracle]) >= 0.98
+
+
+def test_holdout_predictions_within_band_of_fresh_measurements():
+    REL_BAND = 0.02   # the pinned band; exact-span data lands ~1e-12
+    sess = refined_session()
+    for sizes in HOLDOUTS:
+        pred = sess.contraction_predictor(SPEC, sizes)
+        for alg, key in zip(pred.algorithms, pred.benchmark_keys()):
+            mb = sess.parametric.predict(key)
+            assert mb is not None      # the grid is fully covered
+            assert mb.seconds == 0.0   # predictions cost no wall-clock
+            fresh = sess.suite.benchmark_fresh(alg, sizes)
+            assert mb.stats.med == pytest.approx(fresh.stats.med,
+                                                 rel=REL_BAND)
+            assert mb.stats.min == pytest.approx(fresh.stats.min,
+                                                 rel=REL_BAND)
+            assert mb.first == pytest.approx(fresh.first, rel=REL_BAND)
+
+
+def test_oracle_path_stays_apart_from_predictions():
+    sess = refined_session()
+    sess.rank_contraction_algorithms(SPEC, HOLDOUTS[0])
+    before = sess.suite.counters()
+    assert before["predicted_parametric"] > 0
+    sess.contraction_predictor(SPEC, HOLDOUTS[0]).rank_oracle(fresh=True)
+    after = sess.suite.counters()
+    # oracle measurements enter neither results nor the prediction set,
+    # and their wall-clock lands in the oracle bucket
+    assert after["measured"] == before["measured"]
+    assert after["n_benchmarks"] == before["n_benchmarks"]
+    assert after["predicted_parametric"] == before["predicted_parametric"]
+    assert after["oracle_cost_seconds"] > before["oracle_cost_seconds"]
+
+
+def test_measurement_supersedes_prediction():
+    sess = refined_session()
+    sess.rank_contraction_algorithms(SPEC, HOLDOUTS[0])
+    key = next(iter(sess.suite.predictions))
+    n_predicted = sess.suite.predicted_parametric
+    mb = sess.suite.measure_key(key)
+    assert sess.suite.predicted_parametric == n_predicted - 1
+    assert sess.suite.results[key] is mb
+
+
+def test_out_of_domain_falls_back_to_measurement():
+    sess = refined_session()
+    before = sess.suite.counters()
+    far = dict(b=8, i=512, j=64, k=64)   # far outside the fitted [32, 96]
+    sess.rank_contraction_algorithms(SPEC, far)
+    after = sess.suite.counters()
+    # no guessing outside the fitted domain: the size-dependent keys
+    # fell back to the exact-shape measurement path
+    assert after["measured"] > before["measured"]
+
+
+def test_refit_widens_domain_without_losing_coverage():
+    sess = refined_session()
+    n_sigs = sess.parametric.n_signatures
+    wide = dict(b=8, i=160, j=64, k=64)
+    summary = sess.refine_parametric(SPEC, [wide])
+    assert summary["signatures_fitted"] > 0
+    assert summary["measured"] > 0
+    assert sess.parametric.n_signatures == n_sigs   # refit, not new sigs
+    for sizes in HOLDOUTS + [wide]:
+        pred = sess.contraction_predictor(SPEC, sizes)
+        assert all(sess.parametric.covers(k) or k in sess.suite.results
+                   for k in pred.benchmark_keys())
+    # a repeat of the original request is fully covered: no work at all
+    summary = sess.refine_parametric(SPEC, REFINE_GRID)
+    assert summary == {"signatures_fitted": 0,
+                       "signatures_covered": summary["signatures_covered"],
+                       "measured": 0}
+    assert summary["signatures_covered"] == n_sigs
+
+
+def test_refine_parametric_requires_parametric_session():
+    sess = PredictorSession(suite=fake_suite())
+    with pytest.raises(ValueError, match="parametric"):
+        sess.refine_parametric(SPEC, REFINE_GRID)
+
+
+def test_chain_sweep_predicts_unmeasured_steps():
+    chain = "ab,bc,cd->ad"
+    grid = [dict(a=8, b=8, c=c, d=8) for c in (32, 96)]
+    holdo = [dict(a=8, b=8, c=c, d=8) for c in (40, 56)]
+    sess = parametric_session()
+    sess.refine_parametric(chain, grid, max_loop_perms=2)
+    before = sess.suite.counters()
+    sweep = sess.rank_einsum_sweep(chain, holdo, max_loop_perms=2)
+    after = sess.suite.counters()
+    assert after["measured"] == before["measured"]
+    assert sweep.predicted_parametric > 0
+
+
+# ---------------------------------------------------------- persistence ----
+
+def test_store_roundtrip_warm_session_predicts_without_measuring(tmp_path):
+    sess = refined_session()
+    sweep = sess.rank_contraction_sweep(SPEC, HOLDOUTS)
+    path = tmp_path / "store.json"
+    store = sess.save_store(path)
+    assert PARAMETRIC_MODEL_SET in store.model_sets
+    # predictions are NOT measurements: the store holds only measured keys
+    assert store.n_keys == len(sess.suite.results)
+    # the parametric payload round-trips bit-exactly (json floats via repr)
+    loaded = ModelStore.load(path, fingerprint=store.fingerprint)
+    assert loaded.to_payload() == store.to_payload()
+
+    warm = PredictorSession(store=path)
+    assert warm.parametric is not None    # auto-enabled by the stored models
+    assert warm.parametric.n_signatures == sess.parametric.n_signatures
+    warm_sweep = warm.rank_contraction_sweep(SPEC, HOLDOUTS)
+    # zero fresh measurements AND bit-identical rankings to the original
+    assert warm.suite.measured == 0
+    assert warm.suite.predicted_parametric > 0
+    for a, b in zip(sweep.rankings, warm_sweep.rankings):
+        assert [(r.name, r.runtime) for r in a] == \
+            [(r.name, r.runtime) for r in b]
+
+
+def test_parametric_registry_is_shared_via_suite():
+    suite = fake_suite()
+    a = PredictorSession(suite=suite, parametric=True)
+    b = PredictorSession(suite=suite)          # inherits the suite's registry
+    assert b.parametric is a.parametric
+    assert isinstance(a.parametric, ParametricModels)

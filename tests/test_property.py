@@ -6,7 +6,7 @@ import pytest
 pytest.importorskip("hypothesis",
                     reason="hypothesis is a dev extra; install with [dev]")
 
-from hypothesis import given, settings, strategies as st
+from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.contractions import (ContractionSpec, execute,
                                      execute_reference,
@@ -95,3 +95,95 @@ def test_compression_bounded_error(seed, rows, cols):
     max_err = float(jnp.max(jnp.abs(deq["w"] - g["w"])))
     bound = float(jnp.max(jnp.abs(g["w"]))) / 127.0 + 1e-7
     assert max_err <= bound
+
+
+# ------------------------------------------------ size-parametric models --
+
+def _parametric_session(slope, intercept):
+    """A parametric session whose measure_fn is linear in call_bytes."""
+    from repro.core.sampler import Stats
+    from repro.tc import PredictorSession
+    from repro.tc.suite import MicroBenchmarkSuite
+
+    def measure(key, repetitions):
+        t = slope * key.call_bytes + intercept
+        return Stats(0.95 * t, t, 1.1 * t, 1.01 * t, 0.02 * t), 1e-3
+
+    return PredictorSession(suite=MicroBenchmarkSuite(measure_fn=measure),
+                            parametric=True)
+
+
+_PARAM_GRID = [dict(b=8, i=i, j=64, k=64) for i in (32, 96)]
+
+
+@settings(max_examples=5, deadline=None)
+@given(slope=st.floats(1e-10, 1e-8), intercept=st.floats(1e-7, 1e-5))
+def test_parametric_refit_is_bit_stable(slope, intercept):
+    """Two sessions fitting the same measurements produce identical models
+    down to the polynomial coefficients — refinement is deterministic."""
+    sessions = [_parametric_session(slope, intercept) for _ in range(2)]
+    for sess in sessions:
+        sess.refine_parametric("bij,bjk->bik", _PARAM_GRID)
+    a, b = (s.parametric.models for s in sessions)
+    assert set(a) == set(b)
+    for sig in a:
+        ma, mb = a[sig], b[sig]
+        assert ma.domain == mb.domain
+        assert ma.first_poly.coeffs.tolist() == mb.first_poly.coeffs.tolist()
+        assert len(ma.case.pieces) == len(mb.case.pieces)
+        for pa, pb in zip(ma.case.pieces, mb.case.pieces):
+            assert pa.domain == pb.domain
+            for s in ("min", "med", "max", "mean", "std"):
+                assert pa.polys[s].coeffs.tolist() == \
+                    pb.polys[s].coeffs.tolist()
+
+
+@settings(max_examples=5, deadline=None)
+@given(slope=st.floats(1e-10, 1e-8), intercept=st.floats(1e-7, 1e-5),
+       queries=st.lists(st.integers(4, 12), min_size=2, max_size=5,
+                        unique=True))
+def test_parametric_predictions_monotone_in_flops(slope, intercept, queries):
+    """Runtimes monotone in FLOP count stay monotone through the fit:
+    along one growing size dimension, predicted medians never decrease."""
+    sess = _parametric_session(slope, intercept)
+    sess.refine_parametric("bij,bjk->bik", _PARAM_GRID)
+    sig, model = sorted(sess.parametric.models.items(),
+                        key=lambda kv: (kv[0].equation, kv[0].classes))[0]
+    lo, hi = model.domain.lo, model.domain.hi
+    grow = max(range(len(lo)), key=lambda d: hi[d] - lo[d])
+    span = hi[grow] - lo[grow]
+    meds = []
+    for q in sorted(queries):
+        point = tuple(lo[d] + (span * q // 16 if d == grow else 0)
+                      for d in range(len(lo)))
+        pred = model.predict(point)
+        assert pred is not None
+        meds.append(pred[0].med)
+    assert meds == sorted(meds)
+
+
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(slope=st.floats(1e-10, 1e-8), intercept=st.floats(1e-7, 1e-5))
+def test_parametric_store_roundtrip_bit_exact(tmp_path, slope, intercept):
+    """The parametric ModelSet payload survives a save/load bit-exactly
+    (json floats round-trip via repr) for arbitrary fitted coefficients."""
+    from repro.store import PARAMETRIC_MODEL_SET, ModelStore
+
+    sess = _parametric_session(slope, intercept)
+    sess.refine_parametric("bij,bjk->bik", _PARAM_GRID)
+    path = tmp_path / f"store-{slope!r}-{intercept!r}.json"
+    store = sess.save_store(path)
+    loaded = ModelStore.load(path, fingerprint=store.fingerprint)
+    assert PARAMETRIC_MODEL_SET in loaded.model_sets
+    assert loaded.to_payload() == store.to_payload()
+    # and the reloaded models predict bit-identically at a held-out shape
+    from repro.tc import PredictorSession
+    warm = PredictorSession(store=path)
+    sizes = dict(b=8, i=40, j=64, k=64)
+    a = [(r.name, r.runtime)
+         for r in sess.rank_contraction_algorithms("bij,bjk->bik", sizes)]
+    b = [(r.name, r.runtime)
+         for r in warm.rank_contraction_algorithms("bij,bjk->bik", sizes)]
+    assert a == b
+    assert warm.suite.measured == 0

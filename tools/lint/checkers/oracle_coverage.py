@@ -45,6 +45,8 @@ ORACLE_PAIRS: Mapping[str, Sequence[str]] = {
     "rank_einsum_sweep": ("rank_paths_oracle",),
     # model-guided serving vs the action-for-action FIFO baseline
     "ModelGuidedScheduler": ("FifoScheduler",),
+    # size-parametric suite models vs the exact-shape measurement path
+    "refine_parametric": ("benchmark_fresh", "rank_oracle"),
     # the unified session fronts all of the above; its tests must reach
     # a scalar path at least once
     "PredictorSession": ("rank_oracle", "rank_paths_oracle",
