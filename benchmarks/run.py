@@ -55,10 +55,11 @@ SUITES = {
 
 #: the CI smoke lane: the measurement-free prediction-path probe, the
 #: (cheap, deduplicated) contraction probes with their tc_rank64_* and
-#: tc_chain_* metrics, the model-guided-serving probe (serve_*), and the
-#: model-store warm-start/tournament probe (store_*/tournament_*)
+#: tc_chain_* metrics, the model-guided-serving probe (serve_*), the
+#: model-store warm-start/tournament probe (store_*/tournament_*), and
+#: the measured tile-selection economics probe (tile_*)
 SMOKE_SUITES = ("batched_sweep", "contractions", "einsum_paths", "serving",
-                "model_store")
+                "model_store", "tile_tuner")
 
 
 def _run_suite(name: str, mod, desc: str, smoke: bool) -> dict:

@@ -23,6 +23,8 @@ from .selection import (RankedAlgorithm, optimize_algorithm_and_block_size,
                         optimize_block_size, performance_yield,
                         rank_algorithms, rank_einsum_paths, select_algorithm,
                         select_contraction_algorithm, select_einsum_path)
+from .transfer import (D2H, H2D, TransferModel, fit_transfer,
+                       measure_transfers)
 
 __all__ = [
     "Polynomial", "StackedPolynomials", "error_measure", "fit_relative",
@@ -39,4 +41,5 @@ __all__ = [
     "optimize_block_size", "performance_yield", "rank_algorithms",
     "rank_einsum_paths", "select_algorithm",
     "select_contraction_algorithm", "select_einsum_path",
+    "D2H", "H2D", "TransferModel", "fit_transfer", "measure_transfers",
 ]

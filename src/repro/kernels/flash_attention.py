@@ -77,6 +77,28 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def attn_vmem_bytes(bq: int, bkv: int, d: int, itemsize: int = 4) -> int:
+    """VMEM working set of one grid step: q/k/v/o blocks + f32 scratch."""
+    blocks = itemsize * (bq * d + 2 * bkv * d + bq * d)
+    scratch = 4 * (bq + bq + bq * d)       # running max/denominator/acc
+    return blocks + scratch
+
+
+def attn_grid_steps(b: int, h: int, sq: int, skv: int,
+                    bq: int, bkv: int) -> int:
+    """Grid steps of one attention call at blocks (bq, bkv)."""
+    return b * h * (sq // bq) * (skv // bkv)
+
+
+def attn_proxy_problem(bq: int, bkv: int, d: int,
+                       steps_per_dim: int = 2) -> tuple:
+    """(b, h, sq, skv, d) of the canonical small problem measuring
+    blocks (bq, bkv): one batch/head, ``steps_per_dim`` query and kv
+    blocks — enough to exercise the online-softmax revisiting pattern
+    (see :func:`repro.kernels.matmul.proxy_problem`)."""
+    return (1, 1, bq * steps_per_dim, bkv * steps_per_dim, d)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "bq", "bkv", "causal", "window", "softcap", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

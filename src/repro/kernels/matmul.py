@@ -57,6 +57,25 @@ def tile_legal(m: int, n: int, k: int, bm: int, bn: int, bk: int,
     return vmem_bytes(bm, bn, bk) <= vmem_limit
 
 
+def grid_steps(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> int:
+    """Grid steps one (m, n, k) problem runs at tiles (bm, bn, bk)."""
+    return (m // bm) * (n // bn) * (k // bk)
+
+
+def proxy_problem(bm: int, bn: int, bk: int,
+                  steps_per_dim: int = 2) -> tuple:
+    """The canonical small problem that measures tiles (bm, bn, bk).
+
+    The device measurement protocol (:mod:`repro.tc.device`) times a tile
+    config on this problem — ``steps_per_dim`` grid steps in each grid
+    dimension, so the revisiting-output accumulation pattern is exercised
+    — and models the *per-grid-step* cost; a full problem's compute term
+    is then that cost scaled by :func:`grid_steps`, exactly the paper's
+    measure-the-kernel / predict-the-blocked-algorithm split (§4.6).
+    """
+    return (bm * steps_per_dim, bn * steps_per_dim, bk * steps_per_dim)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
            bk: int = 128, interpret: bool = False) -> jax.Array:

@@ -61,6 +61,26 @@ def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, o_ref, h_ref, *,
     o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
 
 
+def ssd_vmem_bytes(chunk: int, p: int, n: int, itemsize: int = 4) -> int:
+    """VMEM working set of one grid step: x/dt/b/c/o blocks + f32 state."""
+    blocks = itemsize * (chunk * p + chunk + 2 * chunk * n + chunk * p)
+    return blocks + 4 * p * n              # carried (P, N) state scratch
+
+
+def ssd_grid_steps(b: int, l: int, h: int, chunk: int) -> int:
+    """Grid steps of one SSD call at chunk length ``chunk``."""
+    return b * h * (l // chunk)
+
+
+def ssd_proxy_problem(chunk: int, p: int, n: int,
+                      steps_per_dim: int = 2) -> tuple:
+    """(b, l, h, p, g, n) of the canonical small problem measuring
+    ``chunk``: one batch/head/group, ``steps_per_dim`` chunks — enough to
+    exercise the carried-state revisiting pattern (see
+    :func:`repro.kernels.matmul.proxy_problem`)."""
+    return (1, chunk * steps_per_dim, 1, p, 1, n)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
         c: jax.Array, *, chunk: int = 128,

@@ -16,14 +16,15 @@ lazy-imports it), so the dependency arrow stays ``store -> tc -> core``.
 
 from .drift import DriftProbe, DriftReading
 from .fingerprint import PlatformFingerprint, current_fingerprint
-from .modelstore import (PARAMETRIC_MODEL_SET, SCHEMA_VERSION, ModelStore,
-                         StoreMismatchError)
+from .modelstore import (DEVICE_MODEL_SET, PARAMETRIC_MODEL_SET,
+                         SCHEMA_VERSION, ModelStore, StoreMismatchError)
 from .tournament import (Snapshot, SnapshotScore, TournamentResult,
                          Workload, frozen_workloads, kendall_tau,
                          run_tournament, workload)
 
 __all__ = [
-    "PARAMETRIC_MODEL_SET", "SCHEMA_VERSION", "ModelStore",
+    "DEVICE_MODEL_SET", "PARAMETRIC_MODEL_SET", "SCHEMA_VERSION",
+    "ModelStore",
     "StoreMismatchError",
     "PlatformFingerprint", "current_fingerprint",
     "DriftProbe", "DriftReading",

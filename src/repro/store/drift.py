@@ -88,8 +88,15 @@ class DriftProbe:
         self._readings: Optional[List[DriftReading]] = None
 
     def keys(self) -> List[MicroBenchmarkKey]:
-        """The deterministic probe subset: evenly strided canonical order."""
-        stored = sorted(self.suite.results, key=sort_key)
+        """The deterministic probe subset: evenly strided canonical order.
+
+        Device kernel keys (``config`` facet set) are excluded: they are
+        measured by :class:`repro.tc.device.DeviceSuite` sweeps, not the
+        §6.2 einsum protocol behind ``measure_fn``, so probing one here
+        would compare incomparable measurements (and ``suite.refresh``
+        would refuse it)."""
+        stored = sorted((k for k in self.suite.results
+                         if k.config is None), key=sort_key)
         if len(stored) <= self.max_keys:
             return stored
         stride = len(stored) / self.max_keys

@@ -55,32 +55,54 @@ SCHEMA_VERSION = 1
 #: before, and old readers see just another named model set.
 PARAMETRIC_MODEL_SET = "__parametric__"
 
+#: reserved ``model_sets`` name holding fitted *device kernel* models —
+#: per-(Pallas kernel, VMEM class) tile-config polynomials plus the
+#: memcpy H2D/D2H transfer models
+#: (:meth:`repro.tc.device.DeviceSuite.to_model_set`).  Same schema
+#: trick as :data:`PARAMETRIC_MODEL_SET`.  Device measurements are even
+#: more platform-bound than einsum ones (they time the accelerator
+#: itself), so loading them under a mismatched fingerprint is refused by
+#: the standard gate — :meth:`ModelStore.device_model_set` is only
+#: reachable after :meth:`ModelStore.load` has already verified the
+#: fingerprint.
+DEVICE_MODEL_SET = "__device__"
+
 
 class StoreMismatchError(ValueError):
     """A store file refusing to load: wrong schema or wrong platform."""
 
 
 def _key_to_dict(key: MicroBenchmarkKey) -> dict:
-    return {"equation": key.equation,
-            "a_shape": list(key.a_shape),
-            "b_shape": list(key.b_shape),
-            "out_shape": list(key.out_shape),
-            "classes": list(key.classes)}
+    d = {"equation": key.equation,
+         "a_shape": list(key.a_shape),
+         "b_shape": list(key.b_shape),
+         "out_shape": list(key.out_shape),
+         "classes": list(key.classes)}
+    if key.config is not None:
+        # device kernel keys only: einsum keys keep the pre-device
+        # payload entry byte-for-byte, so old stores load unchanged
+        d["config"] = list(key.config)
+    return d
 
 
 def _key_from_dict(d: Mapping) -> MicroBenchmarkKey:
+    config = d.get("config")
     return MicroBenchmarkKey(equation=d["equation"],
                              a_shape=tuple(d["a_shape"]),
                              b_shape=tuple(d["b_shape"]),
                              out_shape=tuple(d["out_shape"]),
-                             classes=tuple(d["classes"]))
+                             classes=tuple(d["classes"]),
+                             config=None if config is None
+                             else tuple(config))
 
 
 def sort_key(key: MicroBenchmarkKey) -> tuple:
     """The canonical deterministic ordering of benchmark keys — used for
-    stable payload layout and for the drift probe's subset selection."""
+    stable payload layout and for the drift probe's subset selection.
+    The config facet sorts as ``()`` when absent: ``None`` would not
+    compare against device keys' tuples."""
     return (key.equation, key.a_shape, key.b_shape, key.out_shape,
-            key.classes)
+            key.classes, key.config or ())
 
 
 def _finite(value: float, what: str) -> float:
@@ -171,6 +193,24 @@ class ModelStore:
         """The stored size-parametric models, or ``None`` if this store
         holds none (e.g. written before they existed)."""
         return self.model_sets.get(PARAMETRIC_MODEL_SET)
+
+    def add_device_models(self, models) -> None:
+        """Attach fitted device kernel models under the reserved name
+        (:data:`DEVICE_MODEL_SET`).
+
+        Accepts a :class:`repro.tc.device.DeviceSuite` (exported via its
+        ``to_model_set``) or an already-exported :class:`ModelSet`.
+        With these stored, a warm-started session ranks Pallas tile
+        configs with zero fresh device sweeps and no memcpy probe.
+        """
+        ms = models.to_model_set() if hasattr(models, "to_model_set") \
+            else models
+        self.model_sets[DEVICE_MODEL_SET] = ms
+
+    def device_model_set(self) -> Optional[ModelSet]:
+        """The stored device kernel + transfer models, or ``None`` if
+        this store holds none (e.g. written before they existed)."""
+        return self.model_sets.get(DEVICE_MODEL_SET)
 
     # ---------------------------------------------------------- warm start --
     def load_into(self, suite: MicroBenchmarkSuite) -> int:

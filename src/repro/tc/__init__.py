@@ -54,4 +54,21 @@ __all__ = [
     "ParametricModel", "ParametricModels", "SignatureKey",
     "cost_exponents", "key_at", "signature_dims", "signature_of",
     "size_point",
+    "DEVICE_KERNELS", "DeviceRanked", "DeviceSuite", "device_key",
+    "vmem_class", "RESIDENT", "TIGHT",
 ]
+
+#: the device measurement facet (:mod:`repro.tc.device`) imports the
+#: Pallas kernels — and therefore jax — at module load, so its names are
+#: re-exported lazily: ``import repro.tc`` stays numpy-light and only a
+#: first device-facet access pays the jax import.
+_DEVICE_EXPORTS = frozenset({
+    "DEVICE_KERNELS", "DeviceRanked", "DeviceSuite", "device_key",
+    "vmem_class", "RESIDENT", "TIGHT"})
+
+
+def __getattr__(name):
+    if name in _DEVICE_EXPORTS:
+        from . import device
+        return getattr(device, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

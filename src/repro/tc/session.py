@@ -124,8 +124,10 @@ class PredictorSession:
             param_sets = store.parametric_model_set()
             if param_sets is not None:
                 parametric = True
+            self._device_models = store.device_model_set()
         else:
             self.suite = resolve_suite(suite, repetitions)
+            self._device_models = None
         self.cache = cache if cache is not None else TraceCache()
         if parametric:
             if self.suite.parametric is not None:
@@ -143,6 +145,7 @@ class PredictorSession:
             self.parametric = self.suite.parametric
         self._contraction: Dict[Tuple, ContractionPredictor] = {}
         self._chain: Dict[Tuple, ChainPredictor] = {}
+        self._device = None
 
     # -------------------------------------------------------- predictors --
     def contraction_predictor(self, spec: Union[ContractionSpec, str],
@@ -349,6 +352,42 @@ class PredictorSession:
             keys.extend(pred.benchmark_keys())
         return self.parametric.ensure(keys)
 
+    # ------------------------------------------------------------ device --
+    def device_suite(self, **kwargs):
+        """This session's device measurement facet — a
+        :class:`repro.tc.device.DeviceSuite` over the shared suite
+        (created lazily on first use; ``kwargs`` configure that first
+        construction — ``interpret=``, ``passes=``,
+        ``transfer_measure_fn=``, ...).  A store warm start that holds
+        device models (:data:`repro.store.DEVICE_MODEL_SET`) pre-loads
+        them, so tile rankings inside the fitted config domain take zero
+        fresh measurements.
+        """
+        if self._device is None:
+            from .device import DeviceSuite
+            self._device = DeviceSuite(self.suite, **kwargs)
+            if self._device_models is not None:
+                self._device.load_model_set(self._device_models)
+        elif kwargs:
+            raise ValueError(
+                "the session's device suite is already built; its "
+                "configuration kwargs must go to the first device_suite "
+                "call")
+        return self._device
+
+    def rank_device_tiles(self, kernel: str, problem: Sequence[int],
+                          configs: Sequence[Sequence[int]], *,
+                          stat: str = "med", transfer: bool = True,
+                          itemsize: int = 4):
+        """Rank Pallas tile configs for one problem from measured device
+        models, fastest-predicted total first — each entry carries the
+        ``T_h2d + T_compute + T_d2h`` decomposition (see
+        :meth:`repro.tc.device.DeviceSuite.rank`).  ``kernel`` is a
+        :data:`repro.tc.device.DEVICE_KERNELS` name."""
+        return self.device_suite().rank(kernel, problem, configs,
+                                        stat=stat, transfer=transfer,
+                                        itemsize=itemsize)
+
     # ---------------------------------------------------------- serving --
     def step_cost_model(self, cfg, *, slots: int):
         """Measured per-tick cost model of a serve engine's step kernels.
@@ -394,6 +433,10 @@ class PredictorSession:
             store.add_model_set(name, pred.model_set)
         if self.parametric is not None and self.parametric.models:
             store.add_parametric_models(self.parametric)
+        if self._device is not None:
+            device_models = self._device.to_model_set()
+            if device_models.models:
+                store.add_device_models(device_models)
         if path is not None:
             store.save(path)
         return store

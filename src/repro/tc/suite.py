@@ -72,6 +72,14 @@ class MicroBenchmarkKey:
     b_shape: Tuple[int, ...]
     out_shape: Tuple[int, ...]
     classes: Tuple[str, str]           # cache class of the inputs A, B
+    #: kernel-config facet for *device* kernel keys (e.g. a Pallas
+    #: matmul's (bm, bn, bk) tile) — ``None`` for einsum keys, so every
+    #: pre-existing key, payload and call site is unchanged.  Device keys
+    #: set ``equation`` to the kernel's registry name and ``classes`` to
+    #: its VMEM class (:mod:`repro.tc.device`); two tile configs of one
+    #: kernel are distinct measurements exactly like two cache classes of
+    #: one einsum.
+    config: Optional[Tuple[int, ...]] = None
 
     @property
     def call_bytes(self) -> int:
@@ -277,6 +285,30 @@ class MicroBenchmarkSuite:
         self.loaded_cost_seconds += mb.seconds
         self._provenance[mb.key] = "loaded"
 
+    def record_measurement(self, key: MicroBenchmarkKey, stats: Stats,
+                           first: float, seconds: float) -> MicroBenchmark:
+        """Insert a measurement taken by an external protocol (the
+        device-resident sweep of :mod:`repro.tc.device`).
+
+        Device kernel keys are timed by a whole-grid sweep rather than
+        per-key ``measure_fn`` calls, but they are accounted exactly like
+        einsum keys: deduplicated (an existing result wins — the sweep
+        dedups before measuring, so a collision means another sweep got
+        there first), counted under :attr:`measured`, and their share of
+        the sweep's wall-clock added to :attr:`cost_seconds`.
+        """
+        mb = self.results.get(key)
+        if mb is not None:
+            return mb
+        mb = MicroBenchmark(key=key, stats=stats, first=first,
+                            seconds=seconds)
+        self.results[key] = mb
+        self._predicted.pop(key, None)   # a measurement supersedes it
+        self.measured += 1
+        self.cost_seconds += seconds
+        self._provenance[key] = "measured"
+        return mb
+
     def refresh(self, key: MicroBenchmarkKey) -> MicroBenchmark:
         """Re-measure ``key`` in place (drift repair).
 
@@ -370,6 +402,15 @@ class MicroBenchmarkSuite:
     # ----------------------------------------------------------- internal --
     def _run(self, key: MicroBenchmarkKey,
              oracle: bool = False) -> MicroBenchmark:
+        if key.config is not None:
+            # guards every per-key path (benchmark/measure_key/refresh)
+            # regardless of the injected measure_fn: device keys are only
+            # measured by whole-grid sweeps (repro.tc.device), never by
+            # the per-key einsum protocol
+            raise ValueError(
+                f"device kernel key {key.equation}{key.config} cannot be "
+                f"measured per-key; device keys are measured by "
+                f"repro.tc.device.DeviceSuite sweeps")
         t0 = time.perf_counter()
         stats, first = self.measure_fn(key, self.repetitions)
         seconds = time.perf_counter() - t0
@@ -383,6 +424,11 @@ class MicroBenchmarkSuite:
     def _measure(self, key: MicroBenchmarkKey,
                  repetitions: int) -> Tuple[Stats, float]:
         """The shared §6.2 protocol, reconstructed purely from the key."""
+        if key.config is not None:
+            raise ValueError(
+                f"device kernel key {key.equation}{key.config} cannot go "
+                f"through the §6.2 einsum protocol; device keys are "
+                f"measured by repro.tc.device.DeviceSuite sweeps")
         cls_a, cls_b = key.classes
         return run_kernel_benchmark(
             key.equation, key.a_shape, key.b_shape, key.out_shape,

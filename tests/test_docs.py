@@ -61,10 +61,13 @@ def test_all_exports_have_docstrings(mod):
     """Every ``__all__`` member: functions/classes carry a real docstring
     (a dataclass's auto-generated signature doc does not count), and
     constants carry a ``#:`` doc comment at their definition."""
+    # resolve every export FIRST: lazily re-exported names (repro.tc's
+    # __getattr__ over the device module) only import their defining
+    # module on attribute access, and the #: scan must see that module
+    exports = {name: getattr(mod, name) for name in mod.__all__}
     constants = _documented_constants(mod)
     missing = []
-    for name in mod.__all__:
-        obj = getattr(mod, name)
+    for name, obj in exports.items():
         if inspect.isclass(obj) or inspect.isroutine(obj):
             doc = inspect.getdoc(obj) or ""
             if not doc.strip() or doc.startswith(f"{name}("):

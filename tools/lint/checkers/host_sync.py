@@ -53,6 +53,10 @@ HOT_PATHS: Mapping[str, Set[str]] = {
     },
     "src/repro/train/train_loop.py": {"train"},
     "src/repro/core/contractions.py": {"run_kernel_benchmark"},
+    # the device-resident tile sweep: per-config dispatches chain through
+    # a donated token and ONLY the sweep-end drain may sync (its single
+    # block_until_ready is pragma-justified in place)
+    "src/repro/tc/device.py": {"DeviceSuite._sweep"},
 }
 
 #: receivers recognized as numpy for the D2H-transfer forms

@@ -51,6 +51,10 @@ ORACLE_PAIRS: Mapping[str, Sequence[str]] = {
     # a scalar path at least once
     "PredictorSession": ("rank_oracle", "rank_paths_oracle",
                         "batched=False"),
+    # measured-model tile selection vs the analytic three-term oracle
+    # (the pre-device model, kept alive as `analytic=True` fallback)
+    "select_tiles": ("predict_tile_time", "analytic=True"),
+    "rank_device_tiles": ("predict_tile_time", "analytic=True"),
 }
 
 
